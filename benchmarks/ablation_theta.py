@@ -1,0 +1,90 @@
+"""Paper Table 4: θ-sweep with / without the anchor.
+
+Reports sparsity / recall / FLOPs-proxy time per θ in both modes.  The
+"Without Anchor" mode replaces the anchor statistic with zero (exactly the
+paper's ablation): the threshold compares raw pooled scores against a fixed
+level.  To expose why that fails, inputs vary their sink/stripe magnitudes
+across seeds (different "heads") — the anchor-relative threshold adapts,
+the fixed one cannot serve all inputs at once (paper §2.1.1 / Table 4).
+Without-anchor θ is swept over the *negated raw-score* range so both modes
+get their best shot.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+import jax.numpy as jnp  # noqa: F811
+from repro.core import AnchorConfig
+from repro.core.baselines import anchor_attention_mask
+from repro.core.masks import anchor_region_mask, candidate_region_mask
+from repro.core.metrics import flops_anchor_attention, mask_recall_sparsity
+
+from benchmarks.synthetic_attention import structured_qkv
+
+N = 2048
+BLOCK = 64
+STEP = 4
+WITH_THETAS = (2.0, 3.0, 4.0, 5.0, 5.5, 6.5)
+WITHOUT_THETAS = (-11.0, -9.0, -7.5, -6.0, -4.5, -3.5)
+# "Heads" with different absolute magnitude regimes: the anchor-relative
+# threshold adapts per head; a fixed raw threshold cannot serve all three.
+HEAD_VARIANTS = [
+    # low-scale head: useful stripes sit at raw scores 4.5-6.5
+    dict(sink_score=10.0, local_score=6.5, stripe_score_range=(5.5, 9.0)),
+    dict(sink_score=13.0, local_score=8.5, stripe_score_range=(9.0, 12.5)),
+    # high-scale head: 256 distractor columns at raw 5.5 carry ~1% of the
+    # mass but cost ~25% sparsity if a fixed threshold admits them
+    dict(sink_score=16.0, local_score=11.0, stripe_score_range=(12.0, 15.0),
+         n_distractors=256, distractor_score=5.5),
+]
+
+
+def run(report):
+    frontiers = {}
+    for use_anchor, thetas in ((True, WITH_THETAS), (False, WITHOUT_THETAS)):
+        tag = "with_anchor" if use_anchor else "without_anchor"
+        for theta in thetas:
+            cfg = AnchorConfig(
+                block_q=BLOCK, block_kv=BLOCK, step=STEP, theta=theta,
+                use_anchor=use_anchor)
+            rs, ss, cs = [], [], []
+            cand = np.asarray(candidate_region_mask(N, cfg))
+            anchor_reg = np.asarray(anchor_region_mask(N, cfg))
+            for seed, variant in enumerate(HEAD_VARIANTS):
+                q, k, v, _ = structured_qkv(seed, N, **variant)
+                q, k, v = jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+                mask = anchor_attention_mask(q, k, v, cfg)
+                r, s = mask_recall_sparsity(q, k, mask)
+                stripe_cells = np.asarray(mask) & ~anchor_reg
+                cand_sparsity = 1.0 - stripe_cells.sum() / max(cand.sum(), 1)
+                rs.append(float(r)), ss.append(float(s))
+                cs.append(float(cand_sparsity))
+            recall, sparsity = np.mean(rs), np.mean(ss)
+            cand_sp = np.mean(cs)
+            worst_recall = min(rs)
+            # Time proxy: analytic FLOPs at the achieved stripe density.
+            n_cand = N - BLOCK  # per-superblock candidate scale
+            mean_selected = (1 - sparsity) * n_cand
+            fl = flops_anchor_attention(N, 64, BLOCK, BLOCK, STEP, mean_selected)
+            frontiers.setdefault(tag, []).append((worst_recall, cand_sp))
+            report(f"table4_{tag}_theta{theta:g}_recall", recall * 100,
+                   f"worst_head={worst_recall*100:.1f}%_sparsity={sparsity*100:.1f}%"
+                   f"_stripe_sparsity={cand_sp*100:.1f}%"
+                   f"_flops_speedup={fl['speedup_vs_dense']:.2f}x")
+
+    # Frontier summary: best sparsity reaching each recall target (the
+    # paper's Table-4 reading: anchor reaches the same recall at much
+    # higher sparsity ⇒ less compute).
+    # Frontier targets use the WORST head (per-head adaptivity is the point).
+    for target in (0.90, 0.95, 0.97):
+        row = []
+        for tag, pts in frontiers.items():
+            ok = [s for r, s in pts if r >= target]
+            row.append((tag, max(ok) if ok else float("nan")))
+        d = {t: s for t, s in row}
+        report(f"table4_stripe_sparsity_at_recall{target:.2f}",
+               (d.get("with_anchor", float("nan")) -
+                d.get("without_anchor", float("nan"))) * 100,
+               "_".join(f"{t}={s*100:.1f}%" for t, s in row))

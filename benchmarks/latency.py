@@ -1,0 +1,67 @@
+"""Paper Fig. 2 / 6b / 6c: latency vs recall and latency vs length.
+
+Wall-clock on this CPU container is not TPU latency; we report BOTH:
+  * measured CPU wall time of the jitted XLA paths (relative ordering), and
+  * the analytic FLOP model (the hardware-independent speedup the paper's
+    Fig. 2 plots), at the sparsity each method actually achieves.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AnchorConfig, anchor_attention
+from repro.core.metrics import flops_anchor_attention, flops_dense_attention
+from repro.models.layers import blockwise_attention
+
+from benchmarks.synthetic_attention import structured_qkv
+
+BLOCK = 64
+STEP = 4
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(report):
+    # --- measured CPU latency at N=2048 (Fig. 6b analogue).
+    n = 2048
+    q, k, v, _ = structured_qkv(0, n)
+    qb = jnp.asarray(q)[None, None]
+    kb = jnp.asarray(k)[None, None]
+    vb = jnp.asarray(v)[None, None]
+
+    t_dense = _time(lambda a, b, c: blockwise_attention(a, b, c, block_kv=512),
+                    qb, kb, vb)
+    report("cpu_dense_attention", t_dense, f"n={n}")
+    for theta in (2.0, 4.0):
+        cfg = AnchorConfig(block_q=BLOCK, block_kv=BLOCK, step=STEP,
+                           theta=theta, capacity=512)
+        t_anchor = _time(
+            lambda a, b, c: anchor_attention(a, b, c, cfg), qb, kb, vb)
+        report(f"cpu_anchor_theta{theta:g}", t_anchor,
+               f"speedup={t_dense / t_anchor:.2f}x")
+
+    # --- analytic speedup vs length (Fig. 2 / 6c analogue), paper setting:
+    # block 128, step 16, capacity from measured sparsity ~90% at theta=12.
+    d = 128
+    for n in (4096, 8192, 16384, 32768, 65536, 131072):
+        for sparsity in (0.9,):
+            mean_sel = (1 - sparsity) * n
+            fl = flops_anchor_attention(n, d, 128, 128, 16, mean_sel)
+            report(f"model_speedup_n{n}", fl["speedup_vs_dense"],
+                   f"sparsity={sparsity:.0%}_vs_flash_dense")
+
+    # paper headline: 128k, sparsity ~89% (theta=12 ablation row) -> ~4.6x
+    fl = flops_anchor_attention(131072, 128, 128, 128, 16, 0.11 * 131072)
+    report("paper_fig2_128k_speedup", fl["speedup_vs_dense"],
+           "claim=4.6x_vs_flashattention")

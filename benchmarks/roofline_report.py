@@ -1,0 +1,67 @@
+"""§Roofline reporter: reads results/dryrun/*.json into the per-cell table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(tag: str | None = None):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        has_tag = "__" in base.split("__", 2)[-1] and base.count("__") >= 3
+        if tag is None and has_tag:
+            continue
+        if tag is not None and not base.endswith(f"__{tag}"):
+            continue
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(report):
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    report("dryrun_cells_ok", len(ok), f"of_{len(cells)}")
+    for c in sorted(ok, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        rl = c["roofline"]
+        name = f"roof_{c['arch']}_{c['shape']}_{c['mesh']}"
+        report(
+            name,
+            rl["step_s"] * 1e6,
+            f"bottleneck={rl['bottleneck']}"
+            f"_compute={rl['compute_s']:.4f}s"
+            f"_memory={rl['memory_s']:.4f}s"
+            f"_collective={rl['collective_s']:.4f}s"
+            f"_useful={rl['useful_ratio']:.3f}",
+        )
+
+
+def markdown_table(tag: str | None = None) -> str:
+    """EXPERIMENTS.md §Roofline table."""
+    rows = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "bottleneck | MODEL_FLOPS/HLO | mem GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in sorted(load_cells(tag), key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        if c.get("status") != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                        f"ERROR {c.get('error', '')[:40]} | | | | | |")
+            continue
+        rl = c["roofline"]
+        mem = c["full"]["peak_bytes_per_device"] / 1e9
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {rl['compute_s']:.4f} | {rl['memory_s']:.4f} "
+            f"| {rl['collective_s']:.4f} | **{rl['bottleneck']}** "
+            f"| {rl['useful_ratio']:.3f} | {mem:.1f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

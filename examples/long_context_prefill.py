@@ -1,0 +1,65 @@
+"""Long-context prefill: AnchorAttention vs dense through a real model.
+
+Compares wall time (CPU, relative) and last-token logit agreement on a
+4k-token prompt — the paper's core use case in miniature.
+
+    PYTHONPATH=src python examples/long_context_prefill.py [--seq 4096]
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.core.config import AnchorConfig
+from repro.models import model as model_lib
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi_9b")
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--theta", type=float, default=12.0)
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch)
+    params = model_lib.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, args.seq), 0, cfg.vocab_size)
+    anchor_cfg = AnchorConfig(block_q=128, block_kv=128, step=4,
+                              theta=args.theta, capacity=1024)
+
+    def run(impl):
+        fn = jax.jit(lambda p, t: model_lib.prefill(
+            p, t, cfg, attn_impl=impl, anchor_cfg=anchor_cfg))
+        logits, cache = fn(params, toks)  # compile+run
+        jax.block_until_ready(logits)
+        t0 = time.time()
+        logits, cache = fn(params, toks)
+        jax.block_until_ready(logits)
+        return logits, time.time() - t0
+
+    dense_logits, t_dense = run("dense")
+    anchor_logits, t_anchor = run("anchor")
+    top_d = np.asarray(jnp.argsort(dense_logits[0])[-5:])
+    top_a = np.asarray(jnp.argsort(anchor_logits[0])[-5:])
+    err = float(jnp.abs(anchor_logits - dense_logits).max())
+    print(f"dense prefill : {t_dense*1e3:8.1f} ms")
+    print(f"anchor prefill: {t_anchor*1e3:8.1f} ms  "
+          f"({t_dense/max(t_anchor,1e-9):.2f}x)")
+    print(f"max |logit diff| = {err:.4f}")
+    print(f"top-5 dense : {top_d}")
+    print(f"top-5 anchor: {top_a}")
+    overlap = len(set(top_d.tolist()) & set(top_a.tolist()))
+    print(f"top-5 overlap: {overlap}/5  (random-init model => flat "
+          f"attention; pretrained weights have the sink/stripe structure "
+          f"the anchor exploits)")
+
+
+if __name__ == "__main__":
+    main()

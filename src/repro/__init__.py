@@ -1,0 +1,3 @@
+"""repro — AnchorAttention (EMNLP 2025) as a multi-pod JAX/Pallas framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,155 @@
+"""Checkpointing: atomic step directories, async save, reshard-on-load.
+
+Layout::
+
+    <dir>/step_000100/
+        manifest.json      # tree structure, shapes, dtypes, step
+        arrays.npz         # flattened leaves (process-0 gathers)
+    <dir>/LATEST           # name of the newest *complete* step dir
+
+Fault-tolerance properties:
+  * writes go to ``step_X.tmp`` then ``os.rename`` → a crash mid-save never
+    corrupts LATEST (restore always sees a complete checkpoint);
+  * ``restore`` takes an optional ``sharding_tree`` — arrays are
+    ``device_put`` with the *target* sharding, so a checkpoint written on a
+    16×16 mesh restores onto 8×16 (elastic re-scaling) or a single host;
+  * ``max_to_keep`` garbage-collects old steps;
+  * saves can run on a background thread (``async_save=True``) — the arrays
+    are first fetched to host synchronously (consistent snapshot), then
+    written off-thread.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, max_to_keep: int = 3):
+        self.directory = directory
+        self.max_to_keep = max_to_keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------- save ----
+
+    def save(self, step: int, tree: Params, async_save: bool = False) -> None:
+        flat, treedef = jax.tree.flatten(tree)
+        host_arrays = [np.asarray(jax.device_get(x)) for x in flat]
+        dtypes = [str(a.dtype) for a in host_arrays]
+        # npz has no bf16/fp8 support: store such arrays as raw bit views
+        # and restore via the manifest dtype (bit-exact round trip).
+        host_arrays = [
+            a.view(np.uint16) if a.dtype.name == "bfloat16" else
+            a.view(np.uint8) if a.dtype.name.startswith("float8") else a
+            for a in host_arrays
+        ]
+        manifest = {
+            "step": step,
+            "treedef": json.dumps(_treedef_to_paths(tree)),
+            "shapes": [list(a.shape) for a in host_arrays],
+            "dtypes": dtypes,
+        }
+        if async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_arrays, manifest))
+            self._thread.start()
+        else:
+            self._write(step, host_arrays, manifest)
+
+    def _write(self, step: int, host_arrays, manifest) -> None:
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.directory, name + ".tmp")
+        final = os.path.join(self.directory, name)
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"a{i}": a for i, a in enumerate(host_arrays)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        with open(os.path.join(self.directory, "LATEST.tmp"), "w") as f:
+            f.write(name)
+        os.rename(os.path.join(self.directory, "LATEST.tmp"),
+                  os.path.join(self.directory, "LATEST"))
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self) -> None:
+        steps = sorted(
+            d for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in steps[: -self.max_to_keep]:
+            shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)
+
+    # ---------------------------------------------------------- restore ----
+
+    def latest_step(self) -> int | None:
+        latest = os.path.join(self.directory, "LATEST")
+        if not os.path.exists(latest):
+            return None
+        with open(latest) as f:
+            name = f.read().strip()
+        if not os.path.exists(os.path.join(self.directory, name)):
+            return None
+        return int(name.split("_")[1])
+
+    def restore(
+        self,
+        template: Params,
+        step: int | None = None,
+        sharding_tree: Params | None = None,
+    ) -> tuple[int, Params]:
+        """Restore into the structure of ``template``.
+
+        ``sharding_tree``: optional tree of ``jax.sharding.Sharding`` — each
+        restored array is ``device_put`` with it (reshard-on-load; enables
+        elastic mesh changes between runs).
+        """
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint in {self.directory}")
+        name = f"step_{step:08d}"
+        data = np.load(os.path.join(self.directory, name, "arrays.npz"))
+        with open(os.path.join(self.directory, name, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat_t, treedef = jax.tree.flatten(template)
+        arrays = []
+        for i in range(len(flat_t)):
+            a = data[f"a{i}"]
+            saved_dt = manifest["dtypes"][i]
+            if saved_dt == "bfloat16":
+                a = a.view(jnp.bfloat16.dtype)
+            elif saved_dt.startswith("float8"):
+                a = a.view(np.dtype(saved_dt))
+            arrays.append(a)
+        if sharding_tree is not None:
+            flat_s = jax.tree.leaves(
+                sharding_tree, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+            arrays = [
+                jax.device_put(a.astype(t.dtype), s)
+                for a, t, s in zip(arrays, flat_t, flat_s)
+            ]
+        else:
+            arrays = [jnp.asarray(a.astype(t.dtype)) for a, t in zip(arrays, flat_t)]
+        return step, treedef.unflatten(arrays)
+
+
+def _treedef_to_paths(tree: Params) -> list[str]:
+    return [jax.tree_util.keystr(kp) for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]

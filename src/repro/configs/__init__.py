@@ -1,0 +1,17 @@
+"""Architecture configs (assigned pool + paper models)."""
+
+from repro.configs.registry import (
+    ARCH_IDS,
+    PAPER_MODEL_IDS,
+    SHAPES,
+    ShapeSpec,
+    all_cells,
+    get_config,
+    get_reduced_config,
+    shapes_for,
+)
+
+__all__ = [
+    "ARCH_IDS", "PAPER_MODEL_IDS", "SHAPES", "ShapeSpec", "all_cells",
+    "get_config", "get_reduced_config", "shapes_for",
+]

@@ -1,0 +1,36 @@
+"""deepseek-v2-236b [moe] — MLA kv_lora=512, 2 shared + 160 routed top-6.
+[arXiv:2405.04434; hf] 60L d_model=5120 128H d_ff=1536 (expert)
+vocab=102400."""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,
+    head_dim=192,  # qk head dim (nope 128 + rope 64); v_head_dim=128
+    d_ff=1536,
+    vocab_size=102400,
+    num_experts=160,
+    experts_top_k=6,
+    num_shared_experts=2,
+    use_mla=True,
+    kv_lora_rank=512,
+    qk_rope_dim=64,
+    qk_nope_dim=128,
+    v_head_dim=128,
+    tie_embeddings=False,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="deepseek-reduced", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=4, head_dim=48, d_ff=64, vocab_size=512,
+        num_experts=8, experts_top_k=2, num_shared_experts=1,
+        kv_lora_rank=32, qk_rope_dim=16, qk_nope_dim=32, v_head_dim=32)

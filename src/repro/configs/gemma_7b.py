@@ -1,0 +1,26 @@
+"""gemma-7b [dense] — GeGLU, head_dim=256.  [arXiv:2403.08295; hf]
+28L d_model=3072 16H (GQA kv=16) d_ff=24576 vocab=256000."""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-7b",
+    family="dense",
+    num_layers=28,
+    d_model=3072,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=256,
+    d_ff=24576,
+    vocab_size=256000,
+    mlp_act="gelu",
+    rope_theta=1e4,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="gemma-reduced", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=4, head_dim=32, d_ff=128, vocab_size=512)

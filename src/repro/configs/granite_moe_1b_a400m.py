@@ -1,0 +1,29 @@
+"""granite-moe-1b-a400m [moe] — 32 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+24L d_model=1024 16H (GQA kv=8) d_ff=512 vocab=49155.  vocab 49155 is not
+divisible by the 16-way model axis — embedding replicated (rule fallback)."""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=49155,
+    num_experts=32,
+    experts_top_k=8,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="granite-reduced", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=64, vocab_size=512,
+        num_experts=8, experts_top_k=2)

@@ -1,0 +1,30 @@
+"""mamba2-2.7b [ssm] — SSD (state-space duality), attention-free.
+[arXiv:2405.21060; unverified] 64L d_model=2560 d_ff=0 vocab=50280,
+ssm_state=128.  AnchorAttention is inapplicable (no softmax attention);
+see DESIGN.md §Arch-applicability.  vocab 50280 is not divisible by the
+16-way model axis — embedding stays replicated (rule engine fallback)."""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="mamba2-reduced", num_layers=2, d_model=64,
+        vocab_size=512, ssm_state=16, ssm_head_dim=16)

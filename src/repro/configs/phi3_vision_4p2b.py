@@ -1,0 +1,29 @@
+"""phi-3-vision-4.2b [vlm] — phi3-mini backbone + CLIP stub.
+[hf:microsoft/Phi-3-vision-128k-instruct; hf] 32L d_model=3072 32H
+(GQA kv=32) d_ff=8192 vocab=32064.  The CLIP patch-embedding frontend is
+a STUB: input_specs() provides precomputed patch+text embeddings
+(embed_input=True)."""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    vocab_size=32064,
+    embed_input=True,
+    rope_theta=1e4,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="phi3v-reduced", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=4, head_dim=16, d_ff=128, vocab_size=512)

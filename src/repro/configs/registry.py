@@ -1,0 +1,76 @@
+"""Architecture registry: the 10 assigned archs + the paper's own models.
+
+Each entry carries the full-size :class:`ModelConfig` (used only via the
+dry-run / eval_shape), a ``reduced()`` factory for CPU smoke tests, and the
+input-shape table.  Sources per the assignment sheet; ``[source; tier]``
+noted in each config file.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+# LM transformer shape table (assignment sheet).
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "jamba_1p5_large_398b",
+    "internlm2_1p8b",
+    "yi_9b",
+    "qwen3_32b",
+    "gemma_7b",
+    "musicgen_large",
+    "mamba2_2p7b",
+    "deepseek_v2_236b",
+    "granite_moe_1b_a400m",
+    "phi3_vision_4p2b",
+]
+
+PAPER_MODEL_IDS = ["llama31_8b", "qwen25_7b"]
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = arch.replace("-", "_").replace(".", "p")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def get_reduced_config(arch: str) -> ModelConfig:
+    arch = arch.replace("-", "_").replace(".", "p")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.reduced()
+
+
+def shapes_for(cfg: ModelConfig) -> list[ShapeSpec]:
+    """Applicable shapes per the assignment rules (DESIGN.md §5):
+    ``long_500k`` only for sub-quadratic (ssm/hybrid) archs."""
+    out = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if cfg.sub_quadratic:
+        out.append(SHAPES["long_500k"])
+    return out
+
+
+def all_cells() -> list[tuple[str, ShapeSpec]]:
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            cells.append((arch, shape))
+    return cells

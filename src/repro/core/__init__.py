@@ -1,0 +1,26 @@
+"""AnchorAttention core — the paper's contribution as composable JAX."""
+
+from repro.core.config import AnchorConfig, PAPER_CONFIG
+from repro.core.anchor_attention import (
+    AnchorState,
+    StripeSelection,
+    anchor_attention,
+    anchor_phase,
+    identify_stripes,
+    sparse_phase,
+)
+from repro.core import baselines, masks, metrics
+
+__all__ = [
+    "AnchorConfig",
+    "PAPER_CONFIG",
+    "AnchorState",
+    "StripeSelection",
+    "anchor_attention",
+    "anchor_phase",
+    "identify_stripes",
+    "sparse_phase",
+    "baselines",
+    "masks",
+    "metrics",
+]

@@ -1,0 +1,376 @@
+"""AnchorAttention — production XLA path (paper Algorithms 1-3).
+
+Three phases, all static-shape and ``jit``-able:
+
+  1. :func:`anchor_phase`      — online softmax over init block + local
+                                 window; emits per-row ``(m, l, acc)``.
+  2. :func:`identify_stripes`  — pooled-query difference-aware thresholding
+                                 against the pooled anchor; emits a per-
+                                 superblock stripe selection.
+  3. :func:`sparse_phase`      — resumes the online softmax over the
+                                 selected (gathered) stripes.
+
+Single-head core functions operate on ``q, k, v: (N, D)``; the public
+:func:`anchor_attention` wrapper vmaps over ``(batch, heads)`` with GQA
+support.  The Pallas TPU kernels in :mod:`repro.kernels` implement the same
+semantics; tests assert all paths agree with the dense oracle.
+
+TPU adaptation note (DESIGN.md §3): the paper's Triton kernels load discrete
+KV rows straight from HBM inside the kernel.  Static XLA shapes require a
+``capacity`` bound per superblock; selection overflow keeps the earliest
+stripes by position (sort-free packing — §Perf iteration C3).  With
+``capacity=None`` the full candidate range is coverable and the result is
+exact thresholding.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import AnchorConfig
+
+_NEG_INF = -1e30
+
+
+class AnchorState(NamedTuple):
+    """Per-row online-softmax state after the anchor pass (Alg. 1 outputs)."""
+
+    m: jnp.ndarray  # (N,)  running max logit  — the *anchor*
+    l: jnp.ndarray  # (N,)  running normalizer
+    acc: jnp.ndarray  # (N, D) running weighted-V accumulator (f32)
+
+
+class StripeSelection(NamedTuple):
+    """Static-shape stripe selection for each superblock (Alg. 2 outputs)."""
+
+    idx: jnp.ndarray  # (T_s, C) int32 token indices (padded)
+    valid: jnp.ndarray  # (T_s, C) bool validity of each slot
+    count: jnp.ndarray  # (T_s,) int32 number of selected stripes
+    n_candidates: jnp.ndarray  # (T_s,) int32 size of the candidate range
+
+
+def _window_block_ids(t_m: int, cfg: AnchorConfig) -> jnp.ndarray:
+    """(T_m, step*r + r) KV block ids loaded by each query block's window.
+
+    Query block i covers KV blocks [w_start(i // step), (i+1)*r - 1]; the
+    width is at most ``step*r + r`` blocks, padded on the right with an
+    out-of-range sentinel (t_m * r) that callers mask out.
+    """
+    i = jnp.arange(t_m)
+    k = i // cfg.step
+    start = jnp.maximum(1, k * cfg.step * cfg.r)
+    width = cfg.step * cfg.r + cfg.r
+    offs = jnp.arange(width)
+    blocks = start[:, None] + offs[None, :]
+    last = (i + 1) * cfg.r - 1
+    sentinel = t_m * cfg.r  # one past the final KV block
+    return jnp.where(blocks <= last[:, None], blocks, sentinel)
+
+
+def anchor_phase(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, cfg: AnchorConfig
+) -> AnchorState:
+    """Alg. 1 — anchor computation via blocked online softmax.
+
+    Args:
+      q, k, v: (N, D) single-head tensors.
+
+    Returns:
+      AnchorState with f32 statistics. ``m`` is the anchor (per-row max
+      logit over the anchor region).
+    """
+    n, d = q.shape
+    dv = v.shape[-1]  # may differ from d (MLA)
+    t_m = cfg.num_q_blocks(n)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qb = q.reshape(t_m, cfg.block_q, d)
+
+    # --- init (sink) block: KV block 0, never causally masked for i >= r.
+    k0 = k[: cfg.block_kv]
+    v0 = v[: cfg.block_kv]
+    s0 = (qb.astype(jnp.float32) @ k0.T.astype(jnp.float32)) * scale
+    # Causal mask only matters for query block 0 (rows < block_q).
+    row_pos = (
+        jnp.arange(t_m)[:, None, None] * cfg.block_q
+        + jnp.arange(cfg.block_q)[None, :, None]
+    )
+    s0 = jnp.where(jnp.arange(cfg.block_kv)[None, None, :] <= row_pos, s0, _NEG_INF)
+
+    # --- local window blocks (gathered; padded with a zero block + -inf).
+    width = cfg.step * cfg.r + cfg.r
+    blk_ids = _window_block_ids(t_m, cfg)  # (T_m, width)
+    t_n = cfg.num_kv_blocks(n)
+    k_blocks = k.reshape(t_n, cfg.block_kv, d)
+    v_blocks = v.reshape(t_n, cfg.block_kv, dv)
+    pad_k = jnp.concatenate([k_blocks, jnp.zeros((1, cfg.block_kv, d), k.dtype)])
+    pad_v = jnp.concatenate([v_blocks, jnp.zeros((1, cfg.block_kv, dv), v.dtype)])
+    kw = pad_k[blk_ids]  # (T_m, width, b_kv, D)
+    vw = pad_v[blk_ids]
+    sw = jnp.einsum(
+        "iqd,iwkd->iqwk", qb.astype(jnp.float32), kw.astype(jnp.float32)
+    ) * scale
+    col_pos = blk_ids[:, :, None] * cfg.block_kv + jnp.arange(cfg.block_kv)[None, None, :]
+    col_pos = col_pos[:, None, :, :]  # (T_m, 1, width, b_kv)
+    valid = (blk_ids[:, None, :, None] < t_n) & (col_pos <= row_pos[..., None])
+    sw = jnp.where(valid, sw, _NEG_INF)
+    sw = sw.reshape(t_m, cfg.block_q, width * cfg.block_kv)
+
+    s = jnp.concatenate([s0, sw], axis=-1)  # (T_m, b_q, b_kv*(width+1))
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    vv = jnp.concatenate(
+        [jnp.broadcast_to(v0[None], (t_m, cfg.block_kv, dv)),
+         vw.reshape(t_m, -1, dv)],
+        axis=1,
+    ).astype(jnp.float32)
+    acc = jnp.einsum("iqk,ikd->iqd", p, vv)
+    return AnchorState(
+        m=m.reshape(n), l=l.reshape(n), acc=acc.reshape(n, dv)
+    )
+
+
+def identification_scores(
+    q: jnp.ndarray, k: jnp.ndarray, cfg: AnchorConfig
+) -> jnp.ndarray:
+    """Pooled-query scores ``avgpool(Q) K^T / sqrt(d)`` — (T_m, N), f32."""
+    n, d = q.shape
+    t_m = cfg.num_q_blocks(n)
+    q_mean = jnp.mean(
+        q.reshape(t_m, cfg.block_q, d).astype(jnp.float32), axis=1
+    )
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    return (q_mean @ k.T.astype(jnp.float32)) * scale
+
+
+def stripe_mask_from_scores(
+    scores: jnp.ndarray, m: jnp.ndarray, n: int, cfg: AnchorConfig
+) -> jnp.ndarray:
+    """Alg. 2 thresholding — (T_s, N) bool superblock-level stripe mask.
+
+    ``scores``: (T_m, N) pooled scores; ``m``: (N,) anchor per row.
+    """
+    t_m = cfg.num_q_blocks(n)
+    t_s = cfg.num_superblocks(n)
+    m_bar = jnp.mean(m.reshape(t_m, cfg.block_q), axis=1)  # avgpool(M, b_q)
+    if not cfg.use_anchor:
+        m_bar = jnp.zeros_like(m_bar)  # Table 4 "Without Anchor" ablation
+    diff = m_bar[:, None] - scores  # (T_m, N)
+    hit = diff <= cfg.theta
+    hit = hit.reshape(t_s, cfg.step, n).any(axis=1)  # union over the step rows
+    # Candidate range per superblock: [block_kv, w_start(k)*block_kv).
+    kidx = jnp.arange(n)[None, :]
+    w_start_tok = (
+        jnp.maximum(1, jnp.arange(t_s) * cfg.step * cfg.r) * cfg.block_kv
+    )[:, None]
+    cand = (kidx >= cfg.block_kv) & (kidx < w_start_tok)
+    return hit & cand
+
+
+def identify_stripes(
+    q: jnp.ndarray, k: jnp.ndarray, m: jnp.ndarray, cfg: AnchorConfig
+) -> StripeSelection:
+    """Alg. 2 — difference-aware stripe identification (static shapes).
+
+    Returns token indices per superblock, padded to ``capacity`` slots.
+    Packing is SORT-FREE (cumsum rank + scatter — matching the paper's
+    "avoiding costly sorting operations"): ``lax.top_k`` is not
+    GSPMD-partitionable and forced a 2.3GB/layer head all-gather at the
+    prefill_32k cell (§Perf iteration C3).  On overflow the *earliest*
+    stripes by position win; exact whenever capacity covers the selection
+    (property-tested).
+    """
+    n, _ = q.shape
+    scores = identification_scores(q, k, cfg)
+    sel = stripe_mask_from_scores(scores, m, n, cfg)  # (T_s, N)
+    return pack_selection(sel, n, cfg)
+
+
+def pack_selection(sel: jnp.ndarray, n: int, cfg: AnchorConfig) -> StripeSelection:
+    """Sort-free static packing of a (T_s, N) stripe mask (see above)."""
+    t_s = cfg.num_superblocks(n)
+    capacity = cfg.capacity if cfg.capacity is not None else n
+    capacity = min(capacity, n)
+    rank = jnp.cumsum(sel.astype(jnp.int32), axis=1) - 1  # (T_s, N)
+    keep = sel & (rank < capacity)
+    slot = jnp.where(keep, rank, capacity)  # overflow -> dump slot
+    rows = jnp.broadcast_to(jnp.arange(t_s)[:, None], slot.shape)
+    idx_buf = jnp.zeros((t_s, capacity + 1), jnp.int32)
+    idx_buf = idx_buf.at[rows, slot].set(
+        jnp.broadcast_to(jnp.arange(n)[None, :], slot.shape),
+        mode="drop", unique_indices=False)
+    idx = idx_buf[:, :capacity]
+    count = jnp.sum(sel, axis=1).astype(jnp.int32)
+    valid = jnp.arange(capacity)[None, :] < jnp.minimum(count, capacity)[:, None]
+    kidx = jnp.arange(n)[None, :]
+    w_start_tok = (
+        jnp.maximum(1, jnp.arange(t_s) * cfg.step * cfg.r) * cfg.block_kv
+    )[:, None]
+    n_cand = jnp.sum((kidx >= cfg.block_kv) & (kidx < w_start_tok), axis=1)
+    return StripeSelection(
+        idx=idx.astype(jnp.int32),
+        valid=valid,
+        count=count,
+        n_candidates=n_cand.astype(jnp.int32),
+    )
+
+
+def sparse_phase(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    state: AnchorState,
+    selection: StripeSelection,
+    cfg: AnchorConfig,
+    block_c: int = 512,
+) -> jnp.ndarray:
+    """Alg. 3 — resume online softmax over gathered stripes; returns (N, Dv).
+
+    Blockwise over ``block_c``-wide capacity chunks (an online-softmax scan,
+    like the Pallas kernel) — the one-shot einsum version materialized an
+    (N × capacity) f32 score tensor, ~2.1GB/device at the prefill_32k cell
+    (§Perf iteration C2).  bf16 operands, f32 accumulation.
+    """
+    n, d = q.shape
+    dv = v.shape[-1]
+    t_s = cfg.num_superblocks(n)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    k_sel = k[selection.idx]  # (T_s, C, D) XLA gather — HBM->HBM compaction
+    v_sel = v[selection.idx]
+    cap = k_sel.shape[1]
+    block_c = min(block_c, cap)
+    if cap % block_c:
+        pad = block_c - cap % block_c
+        k_sel = jnp.pad(k_sel, ((0, 0), (0, pad), (0, 0)))
+        v_sel = jnp.pad(v_sel, ((0, 0), (0, pad), (0, 0)))
+        valid = jnp.pad(selection.valid, ((0, 0), (0, pad)))
+        cap += pad
+    else:
+        valid = selection.valid
+    n_chunks = cap // block_c
+
+    qb = q.reshape(t_s, cfg.step * cfg.block_q, d)
+    m0 = state.m.reshape(t_s, cfg.step * cfg.block_q)
+    l0 = state.l.reshape(t_s, cfg.step * cfg.block_q)
+    acc0 = state.acc.reshape(t_s, cfg.step * cfg.block_q, dv)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        k_j, v_j, valid_j = inp  # (T_s, block_c, D/Dv), (T_s, block_c)
+        s = jnp.einsum("sqd,scd->sqc", qb, k_j,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid_j[:, None, :] != 0, s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(valid_j[:, None, :] != 0, p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "sqc,scd->sqd", p.astype(v_j.dtype), v_j,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    kc = jnp.moveaxis(k_sel.reshape(t_s, n_chunks, block_c, d), 1, 0)
+    vc = jnp.moveaxis(v_sel.reshape(t_s, n_chunks, block_c, dv), 1, 0)
+    valc = jnp.moveaxis(valid.reshape(t_s, n_chunks, block_c), 1, 0)
+    (m_new, l_new, acc_new), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (kc, vc, valc))
+    out = acc_new / l_new[..., None]
+    return out.reshape(n, dv)
+
+
+def _anchor_attention_head(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, cfg: AnchorConfig
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    state = anchor_phase(q, k, v, cfg)
+    selection = identify_stripes(q, k, state.m, cfg)
+    out = sparse_phase(q, k, v, state, selection, cfg)
+    return out, selection.count
+
+
+def _anchor_attention_group(
+    qg: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, cfg: AnchorConfig
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """share_kv_groups: one unioned selection + one gather per KV head.
+
+    qg: (rep, N, D) — the query heads of one KV group.
+    """
+    n = qg.shape[1]
+    states = jax.vmap(anchor_phase, in_axes=(0, None, None, None))(
+        qg, k, v, cfg)
+
+    def head_mask(qh, mh):
+        scores = identification_scores(qh, k, cfg)
+        return stripe_mask_from_scores(scores, mh, n, cfg)
+
+    masks = jax.vmap(head_mask)(qg, states.m)  # (rep, T_s, N)
+    selection = pack_selection(masks.any(axis=0), n, cfg)
+    outs = jax.vmap(
+        lambda qh, st: sparse_phase(qh, k, v, st, selection, cfg)
+    )(qg, states)
+    return outs, selection.count
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "return_stats"))
+def anchor_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: AnchorConfig = AnchorConfig(),
+    return_stats: bool = False,
+):
+    """AnchorAttention over batched multi-head inputs (causal prefill).
+
+    Args:
+      q: (B, Hq, N, D); k, v: (B, Hkv, N, D) with Hq % Hkv == 0 (GQA).
+      cfg: AnchorConfig (hashable static arg).
+      return_stats: additionally return per-superblock selected-stripe
+        counts (B, Hq, T_s) for sparsity accounting.
+
+    Returns:
+      (B, Hq, N, D) output in ``q.dtype`` (f32 accumulation inside), and
+      optionally the counts.
+    """
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not divisible by Hkv={hkv}")
+    if cfg.share_kv_groups and hkv != hq:
+        rep = hq // hkv
+        qg = q.reshape(b, hkv, rep, n, d)
+        fn = jax.vmap(jax.vmap(_anchor_attention_group,
+                               in_axes=(0, 0, 0, None)),
+                      in_axes=(0, 0, 0, None))
+        out, counts = fn(qg, k, v, cfg)
+        out = out.reshape(b, hq, n, -1).astype(q.dtype)
+        if return_stats:
+            return out, counts
+        return out
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    fn = jax.vmap(jax.vmap(_anchor_attention_head, in_axes=(0, 0, 0, None)),
+                  in_axes=(0, 0, 0, None))
+    out, counts = fn(q, k, v, cfg)
+    out = out.astype(q.dtype)
+    if return_stats:
+        return out, counts
+    return out
+
+
+def selection_dense_mask(
+    selection: StripeSelection, n: int, cfg: AnchorConfig
+) -> jnp.ndarray:
+    """(N, N) dense bool mask of the selected stripes (diagnostics only)."""
+    t_s = cfg.num_superblocks(n)
+    sel = jnp.zeros((t_s, n), bool)
+    rows = jnp.arange(t_s)[:, None]
+    sel = sel.at[rows, selection.idx].max(selection.valid)
+    per_row = jnp.repeat(sel, cfg.step * cfg.block_q, axis=0)[:n]
+    return per_row

@@ -1,0 +1,133 @@
+"""Baseline sparse-attention methods the paper compares against (§4.1).
+
+Each baseline produces a dense boolean mask (for metrics) and a masked
+attention output.  These are specification-level implementations used by the
+recall/sparsity/ablation benchmarks; FlashAttention-the-kernel (dense
+baseline) lives in :mod:`repro.kernels.flash`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as masks_lib
+from repro.core.config import AnchorConfig
+from repro.core.anchor_attention import (
+    anchor_phase,
+    identify_stripes,
+    selection_dense_mask,
+)
+
+_NEG_INF = -1e30
+
+
+def masked_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Dense masked softmax attention for one head (f32 accumulation)."""
+    n, d = q.shape
+    s = (q.astype(jnp.float32) @ k.T.astype(jnp.float32)) / jnp.sqrt(
+        jnp.asarray(d, jnp.float32)
+    )
+    s = jnp.where(mask, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+def full_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Full-attn baseline (causal)."""
+    return masked_attention(q, k, v, masks_lib.causal_mask(q.shape[0]))
+
+
+def streaming_llm_mask(q, k, n_init: int = 1024, n_local: int = 8192):
+    return masks_lib.streaming_llm_mask(q.shape[0], n_init, n_local)
+
+
+def vertical_slash_mask(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    n_vertical: int = 1024,
+    n_slash: int = 8192,
+    last_q: int = 64,
+) -> jnp.ndarray:
+    """MInference-style Vertical_Slash: estimate from the last ``last_q``
+    queries, keep top columns and top diagonals."""
+    n, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qs = q[-last_q:].astype(jnp.float32)
+    s = (qs @ k.T.astype(jnp.float32)) * scale  # (last_q, N)
+    probs = jax.nn.softmax(s, axis=-1)
+    col_score = probs.sum(axis=0)  # vertical importance
+    n_vertical = min(n_vertical, n)
+    _, vert_idx = jax.lax.top_k(col_score, n_vertical)
+    # Slash: score diagonals (offset = q_pos - k_pos) using the same probes.
+    qpos = jnp.arange(n - last_q, n)[:, None]
+    kpos = jnp.arange(n)[None, :]
+    offset = qpos - kpos  # (last_q, N), valid when >= 0
+    offs_score = jnp.zeros((n,), jnp.float32).at[
+        jnp.clip(offset, 0, n - 1).reshape(-1)
+    ].add(jnp.where(offset >= 0, probs, 0.0).reshape(-1))
+    n_slash = min(n_slash, n)
+    _, slash_off = jax.lax.top_k(offs_score, n_slash)
+    return masks_lib.vertical_slash_mask(n, vert_idx, slash_off)
+
+
+def block_topcdf_mask(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    gamma: float = 0.95,
+    block: int = 128,
+    min_budget: int = 1024,
+) -> jnp.ndarray:
+    """FlexPrefill-like block selection by top-cdf over pooled block scores.
+
+    Per query block: softmax over causal KV-block scores (pooled q x pooled
+    k), sort descending, keep the smallest prefix reaching ``gamma``
+    cumulative mass; always keep the first and diagonal blocks and at least
+    ``min_budget`` tokens.
+    """
+    n, d = q.shape
+    t = n // block
+    qp = jnp.mean(q.reshape(t, block, d).astype(jnp.float32), axis=1)
+    kp = jnp.mean(k.reshape(t, block, d).astype(jnp.float32), axis=1)
+    s = (qp @ kp.T) / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    causal_b = jnp.tril(jnp.ones((t, t), bool))
+    s = jnp.where(causal_b, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    order = jnp.argsort(-p, axis=-1)
+    p_sorted = jnp.take_along_axis(p, order, axis=-1)
+    cdf = jnp.cumsum(p_sorted, axis=-1)
+    keep_sorted = (cdf - p_sorted) < gamma  # smallest prefix reaching gamma
+    min_blocks = max(1, min_budget // block)
+    keep_sorted = keep_sorted | (jnp.arange(t)[None, :] < min_blocks)
+    keep = jnp.zeros((t, t), bool).at[
+        jnp.arange(t)[:, None], order
+    ].set(keep_sorted)
+    keep = keep & causal_b
+    keep = keep.at[:, 0].set(True)
+    keep = keep | jnp.eye(t, dtype=bool)
+    mask = masks_lib.expand_block_mask(keep, block, block)
+    return mask & masks_lib.causal_mask(n)
+
+
+def anchor_attention_mask(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, cfg: AnchorConfig
+) -> jnp.ndarray:
+    """The full computed-position mask of AnchorAttention (anchor region ∪
+    selected stripes) for one head — used by the metrics benchmarks."""
+    n = q.shape[0]
+    state = anchor_phase(q, k, v, cfg)
+    selection = identify_stripes(q, k, state.m, cfg)
+    sel = selection_dense_mask(selection, n, cfg)
+    anchor = masks_lib.anchor_region_mask(n, cfg)
+    return (sel | anchor) & masks_lib.causal_mask(n)
+
+
+BASELINE_MASKS = {
+    "streaming_llm": lambda q, k, v, **kw: streaming_llm_mask(q, k, **kw),
+    "vertical_slash": lambda q, k, v, **kw: vertical_slash_mask(q, k, **kw),
+    "flexprefill": lambda q, k, v, **kw: block_topcdf_mask(q, k, **kw),
+}

@@ -1,0 +1,90 @@
+"""Configuration for AnchorAttention (paper Algorithms 1-3).
+
+All block arithmetic in this repo is 0-based. The paper's Algorithm 1 line 8
+(1-based) ``j_start = max(2, floor((i-1)/step) * step * (b_q/b_kv))`` becomes
+``w_start(k) = max(1, k * step * r)`` for 0-based superblock ``k = i // step``
+and ``r = b_q // b_kv``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class AnchorConfig:
+    """Hyper-parameters of AnchorAttention.
+
+    Attributes:
+      block_q: query block size ``b_q`` (paper uses 128).
+      block_kv: key/value block size ``b_kv`` (paper uses 128).
+      step: number of query blocks sharing one identification pass /
+        index list (paper uses 16).
+      theta: difference threshold. A key ``j`` is selected for pooled query
+        row ``b`` iff ``anchor_b - score_bj <= theta``. Paper default 12.0.
+      capacity: maximum number of selected stripes per superblock in the
+        static-shape (XLA) execution path.  ``None`` means "all candidates"
+        (exact thresholding; used by tests and small-scale benchmarks).
+        TPU deployments set a budget, e.g. ``4096``.
+      use_anchor: if ``False``, reproduces the paper's "Without Anchor"
+        ablation (Table 4): the anchor statistic is replaced by zero, so the
+        threshold compares raw pooled scores against ``theta`` directly.
+      share_kv_groups: beyond-paper GQA variant (§Perf iteration C4): one
+        stripe selection per KV head — the union over its query group.
+        Selection is a superset of every per-head selection (recall can
+        only increase); K/V gather traffic drops by the group size.
+      interpret: run Pallas kernels in interpret mode (CPU validation).
+    """
+
+    block_q: int = 128
+    block_kv: int = 128
+    step: int = 16
+    theta: float = 12.0
+    capacity: int | None = None
+    use_anchor: bool = True
+    share_kv_groups: bool = False
+    interpret: bool = True
+
+    def __post_init__(self) -> None:
+        if self.block_q % self.block_kv != 0:
+            raise ValueError(
+                f"block_q ({self.block_q}) must be a multiple of block_kv "
+                f"({self.block_kv})"
+            )
+        if self.step < 1:
+            raise ValueError("step must be >= 1")
+
+    @property
+    def r(self) -> int:
+        """Ratio b_q / b_kv (paper keeps both at 128 so r == 1)."""
+        return self.block_q // self.block_kv
+
+    def superblock_q(self) -> int:
+        """Tokens covered by one identification superblock."""
+        return self.block_q * self.step
+
+    def w_start_block(self, k: int) -> int:
+        """First local-window KV block for superblock ``k`` (0-based).
+
+        Matches paper Alg. 1 line 8; KV block 0 (the "init"/sink block) is
+        handled separately and never part of the window.
+        """
+        return max(1, k * self.step * self.r)
+
+    def num_q_blocks(self, n: int) -> int:
+        if n % self.block_q != 0:
+            raise ValueError(f"sequence length {n} not divisible by block_q")
+        return n // self.block_q
+
+    def num_kv_blocks(self, n: int) -> int:
+        if n % self.block_kv != 0:
+            raise ValueError(f"sequence length {n} not divisible by block_kv")
+        return n // self.block_kv
+
+    def num_superblocks(self, n: int) -> int:
+        t_m = self.num_q_blocks(n)
+        return (t_m + self.step - 1) // self.step
+
+
+# Paper's defaults for the main experiments (§4.1 Implementation).
+PAPER_CONFIG = AnchorConfig(block_q=128, block_kv=128, step=16, theta=12.0)

@@ -1,0 +1,94 @@
+"""Dense boolean mask builders.
+
+These are *specification* objects: small-N dense masks used by the test
+oracle, the metrics module and the recall/sparsity benchmarks.  The
+production path (``anchor_attention.py``, ``repro.kernels``) never
+materializes an (N, N) mask.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import AnchorConfig
+
+
+def causal_mask(n: int) -> jnp.ndarray:
+    """(n, n) lower-triangular boolean mask."""
+    return jnp.tril(jnp.ones((n, n), dtype=bool))
+
+
+def anchor_region_mask(n: int, cfg: AnchorConfig) -> jnp.ndarray:
+    """Boolean (n, n) mask of the phase-1 anchor region.
+
+    Row i attends to: KV block 0 (init / attention sink), plus the local
+    window KV blocks [w_start(k), block(i)] of its superblock, causally
+    masked.
+    """
+    qi = np.arange(n)
+    kj = np.arange(n)
+    qb = qi // cfg.block_q  # query block index per row
+    sb = qb // cfg.step  # superblock index per row
+    kb = kj // cfg.block_kv  # kv block index per column
+    w_start = np.maximum(1, sb * cfg.step * cfg.r)  # per-row window start blk
+    init = kb[None, :] == 0
+    window = (kb[None, :] >= w_start[:, None]) & (kb[None, :] <= (qb * cfg.r + cfg.r - 1)[:, None])
+    mask = (init | window) & (kj[None, :] <= qi[:, None])
+    return jnp.asarray(mask)
+
+
+def candidate_region_mask(n: int, cfg: AnchorConfig) -> jnp.ndarray:
+    """Boolean (n, n) mask of positions eligible for stripe selection.
+
+    For row i in superblock k these are tokens j with
+    ``block_kv <= j < w_start(k) * block_kv`` — strictly before the anchor
+    window of every query block of the superblock, excluding the init block
+    (already computed in phase 1).  Disjoint from ``anchor_region_mask``.
+    """
+    qi = np.arange(n)
+    kj = np.arange(n)
+    sb = (qi // cfg.block_q) // cfg.step
+    w_start_tok = np.maximum(1, sb * cfg.step * cfg.r) * cfg.block_kv
+    mask = (kj[None, :] >= cfg.block_kv) & (kj[None, :] < w_start_tok[:, None])
+    return jnp.asarray(mask)
+
+
+def streaming_llm_mask(n: int, n_init: int, n_local: int) -> jnp.ndarray:
+    """StreamingLLM (Xiao et al., 2024): init tokens + sliding local window."""
+    qi = np.arange(n)
+    kj = np.arange(n)
+    init = kj[None, :] < n_init
+    local = kj[None, :] > (qi[:, None] - n_local)
+    mask = (init | local) & (kj[None, :] <= qi[:, None])
+    return jnp.asarray(mask)
+
+
+def vertical_slash_mask(
+    n: int,
+    vertical_idx: jnp.ndarray,
+    slash_offsets: jnp.ndarray,
+    n_init: int = 128,
+    n_local: int = 128,
+) -> jnp.ndarray:
+    """MInference Vertical_Slash pattern from chosen columns and diagonals.
+
+    Args:
+      vertical_idx: (v,) int column indices kept for the whole map.
+      slash_offsets: (s,) int diagonal offsets (0 = main diagonal) kept.
+    """
+    qi = jnp.arange(n)
+    kj = jnp.arange(n)
+    vert = jnp.zeros((n,), bool).at[vertical_idx].set(True)[None, :]
+    vert = jnp.broadcast_to(vert, (n, n))
+    diag = qi[:, None] - kj[None, :]  # >= 0 in the causal region
+    slash = jnp.isin(diag, slash_offsets)
+    init = kj[None, :] < n_init
+    local = kj[None, :] > (qi[:, None] - n_local)
+    mask = (vert | slash | init | local) & (kj[None, :] <= qi[:, None])
+    return mask
+
+
+def expand_block_mask(block_mask: jnp.ndarray, block_q: int, block_kv: int) -> jnp.ndarray:
+    """(T_m, T_n) block mask -> (N, N) element mask (no causal)."""
+    return jnp.repeat(jnp.repeat(block_mask, block_q, axis=0), block_kv, axis=1)

@@ -1,0 +1,87 @@
+"""Recall / sparsity metrics (paper §2.1, Fig. 4 caption).
+
+Recall follows MInference / the paper: the fraction of full-attention
+probability mass covered by the sparse pattern, averaged over query rows.
+Sparsity is the fraction of *causal* positions not computed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import causal_mask
+
+
+def full_attention_probs(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """(N, N) causal softmax probabilities in f32 for a single head."""
+    n, d = q.shape
+    s = (q.astype(jnp.float32) @ k.T.astype(jnp.float32)) / jnp.sqrt(
+        jnp.asarray(d, jnp.float32)
+    )
+    s = jnp.where(causal_mask(n), s, -jnp.inf)
+    return jax.nn.softmax(s, axis=-1)
+
+
+def recall(probs: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Mean covered probability mass.  ``probs``: (N, N) full-attention
+    probabilities; ``mask``: (N, N) bool computed positions."""
+    covered = jnp.sum(jnp.where(mask, probs, 0.0), axis=-1)
+    return jnp.mean(covered)
+
+
+def sparsity(mask: jnp.ndarray) -> jnp.ndarray:
+    """1 - computed/causal positions for an (N, N) bool mask."""
+    n = mask.shape[0]
+    causal = causal_mask(n)
+    computed = jnp.sum(jnp.where(causal, mask, False))
+    total = jnp.sum(causal)
+    return 1.0 - computed / total
+
+
+def mask_recall_sparsity(
+    q: jnp.ndarray, k: jnp.ndarray, mask: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Convenience: (recall, sparsity) of a mask for one head."""
+    probs = full_attention_probs(q, k)
+    return recall(probs, mask), sparsity(mask)
+
+
+def output_recall(out_sparse: jnp.ndarray, out_full: jnp.ndarray, atol: float = 5e-3) -> jnp.ndarray:
+    """Fraction of output elements numerically equal to full attention
+    (the paper's Fig. 4 definition, applied to outputs)."""
+    close = jnp.abs(out_sparse.astype(jnp.float32) - out_full.astype(jnp.float32)) <= atol
+    return jnp.mean(close.astype(jnp.float32))
+
+
+def flops_dense_attention(n: int, d: int) -> float:
+    """Causal dense attention matmul FLOPs for one head (QK^T + PV)."""
+    return 2.0 * 2.0 * (n * (n + 1) / 2) * d  # two matmuls over the triangle
+
+
+def flops_anchor_attention(
+    n: int, d: int, block_q: int, block_kv: int, step: int, mean_selected: float
+) -> dict[str, float]:
+    """Analytic FLOP model of the three phases for one head.
+
+    ``mean_selected``: average number of selected stripes per superblock.
+    Used by the speedup-proxy benchmark (paper Fig. 2 / Fig. 6c analogue).
+    """
+    t_m = n // block_q
+    t_s = (t_m + step - 1) // step
+    # Phase 1: init block + window (<= (step+1) blocks of b_kv) per q block.
+    window_cols = block_kv * (step + 1)
+    phase1 = 2.0 * 2.0 * t_m * block_q * min(window_cols, n) * d
+    # Phase 2: pooled q (T_m rows) x all keys.
+    phase2 = 2.0 * t_m * n * d
+    # Phase 3: every q row of a superblock hits `mean_selected` stripes.
+    phase3 = 2.0 * 2.0 * t_s * (step * block_q) * mean_selected * d
+    total = phase1 + phase2 + phase3
+    return {
+        "anchor": phase1,
+        "identify": phase2,
+        "sparse": phase3,
+        "total": total,
+        "dense": flops_dense_attention(n, d),
+        "speedup_vs_dense": flops_dense_attention(n, d) / total,
+    }

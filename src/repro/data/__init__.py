@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, NeedleRetrieval, ZipfLM, make_pipeline
+
+__all__ = ["DataConfig", "NeedleRetrieval", "ZipfLM", "make_pipeline"]

@@ -1,0 +1,4 @@
+from repro.distributed import collectives, sharding
+from repro.distributed.fault_tolerance import FTConfig, FaultTolerantRunner
+
+__all__ = ["collectives", "sharding", "FTConfig", "FaultTolerantRunner"]

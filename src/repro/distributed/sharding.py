@@ -1,0 +1,204 @@
+"""Sharding rules: logical param/activation layout → mesh PartitionSpecs.
+
+Megatron-style tensor parallelism over the ``model`` axis, batch (and
+ZeRO-1 optimizer state) over ``data`` (× ``pod`` when present).  Rules are
+name-based over the param tree; every rule checks divisibility against the
+mesh axis size and falls back to replication when a dim doesn't divide
+(e.g. mamba2's vocab 50280 on a 16-way axis — recorded in the config docs).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = Any
+
+# Leaf-name → (axis-position → logical axis) rules.  Position counted from
+# the END of the shape (stacked group dims sit in front).
+# Logical axes: "tp_col" (shard output dim), "tp_row" (shard input dim),
+# "expert" (shard expert dim), "vocab".
+_RULES: list[tuple[tuple[str, ...], dict[int, str]]] = [
+    (("embed",), {-2: "vocab"}),
+    (("lm_head",), {-2: "vocab"}),
+    # Attention.
+    (("attn", "wq"), {-1: "tp_col"}),
+    (("attn", "wk"), {-1: "tp_col"}),
+    (("attn", "wv"), {-1: "tp_col"}),
+    (("attn", "wo"), {-2: "tp_row"}),
+    # w_dkv stays REPLICATED: col-sharding it puts the compressed-KV
+    # stream's R dim on `model`, forcing a 0.5GB/layer cache all-gather in
+    # MLA decode (§Perf iteration A2). The weight is ~6MB — replication
+    # is free; the latent cache stays replicated across `model`.
+    (("attn", "w_uk"), {-1: "tp_col"}),
+    (("attn", "w_uv"), {-1: "tp_col"}),
+    # Dense MLP.
+    (("mlp", "wi"), {-1: "tp_col"}),
+    (("mlp", "wg"), {-1: "tp_col"}),
+    (("mlp", "wo"), {-2: "tp_row"}),
+    (("shared", "wi"), {-1: "tp_col"}),
+    (("shared", "wg"), {-1: "tp_col"}),
+    (("shared", "wo"), {-2: "tp_row"}),
+    # MoE experts: expert-parallel over `model`.
+    (("moe", "wi"), {-3: "expert"}),
+    (("moe", "wg"), {-3: "expert"}),
+    (("moe", "wo"), {-3: "expert"}),
+    # Mamba.
+    (("mamba", "w_xz"), {-1: "tp_col"}),
+    (("mamba", "w_dt"), {-1: "tp_col"}),
+    (("mamba", "conv_w"), {-1: "tp_col"}),
+    (("mamba", "w_out"), {-2: "tp_row"}),
+    (("mamba", "out_norm"), {-1: "tp_col"}),
+]
+
+
+def _match(path: tuple[str, ...], pattern: tuple[str, ...]) -> bool:
+    """True if `pattern` appears as a contiguous subsequence of `path`."""
+    for i in range(len(path) - len(pattern) + 1):
+        if path[i : i + len(pattern)] == pattern:
+            return True
+    return False
+
+
+def _path_names(kp) -> tuple[str, ...]:
+    names = []
+    for entry in kp:
+        if hasattr(entry, "key"):
+            names.append(str(entry.key))
+        elif hasattr(entry, "name"):
+            names.append(str(entry.name))
+    return tuple(names)
+
+
+def logical_to_physical(logical: str, mesh: Mesh) -> str | tuple[str, ...] | None:
+    if logical in ("tp_col", "tp_row", "expert", "vocab"):
+        return "model" if "model" in mesh.axis_names else None
+    return None
+
+
+def param_pspec(
+    path: tuple[str, ...], shape: tuple[int, ...], mesh: Mesh
+) -> P:
+    """PartitionSpec for one param leaf (with divisibility fallback)."""
+    axis_size = dict(mesh.shape)
+    for pattern, dims in _RULES:
+        if _match(path, pattern):
+            spec: list[str | None] = [None] * len(shape)
+            for rel_pos, logical in dims.items():
+                pos = len(shape) + rel_pos
+                if pos < 0 or pos >= len(shape):
+                    continue
+                phys = logical_to_physical(logical, mesh)
+                if phys is None:
+                    continue
+                if shape[pos] % axis_size[phys] != 0:
+                    continue  # replication fallback (e.g. odd vocab)
+                spec[pos] = phys
+            return P(*spec)
+    return P()  # norms, router, scalars — replicated
+
+
+def param_shardings(params_shape: Params, mesh: Mesh) -> Params:
+    """Tree of NamedShardings matching a (shape-)tree of params."""
+
+    def one(kp, leaf):
+        spec = param_pspec(_path_names(kp), tuple(leaf.shape), mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def zero1_shardings(params_shape: Params, mesh: Mesh) -> Params:
+    """ZeRO-1: optimizer-state leaves additionally sharded over the batch
+    axes on the largest remaining dim (fallback: param sharding)."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    axis_size = dict(mesh.shape)
+    zero_size = 1
+    for a in batch_axes:
+        zero_size *= axis_size[a]
+
+    def one(kp, leaf):
+        spec = list(param_pspec(_path_names(kp), tuple(leaf.shape), mesh))
+        spec += [None] * (len(leaf.shape) - len(spec))
+        # Find the largest unsharded dim divisible by the batch axes.
+        best, best_dim = -1, -1
+        for i, s in enumerate(spec):
+            if s is None and leaf.shape[i] % zero_size == 0 and leaf.shape[i] > best:
+                best, best_dim = leaf.shape[i], i
+        if best_dim >= 0 and zero_size > 1:
+            spec[best_dim] = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_sharding(mesh: Mesh) -> NamedSharding:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    spec = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return NamedSharding(mesh, P(spec))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def cache_shardings(cache_shape: Params, mesh: Mesh, seq_shard: bool = False) -> Params:
+    """KV-cache shardings for decode.
+
+    Default: batch over (pod, data), kv-heads over model (flattened-feature
+    fallback when heads don't divide).  ``seq_shard=True`` (long_500k,
+    batch=1): shard the cache *sequence* dim over data instead — used with
+    the flash-decode shard_map combine.
+    """
+    axis_size = dict(mesh.shape)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    batch_spec = batch_axes if len(batch_axes) > 1 else (
+        batch_axes[0] if batch_axes else None)
+
+    def one(kp, leaf):
+        names = _path_names(kp)
+        shape = tuple(leaf.shape)
+        spec: list[Any] = [None] * len(shape)
+        # Layout conventions (leading num_groups axis at position 0):
+        #   k/v:     (G, B, Hkv, S, D)
+        #   ckv:     (G, B, S, R)        (MLA compressed)
+        #   k_rope:  (G, B, S, R)
+        #   conv:    (G, B, K-1, C)      (mamba)
+        #   ssd:     (G, B, H, S, P)
+        is_attn_kv = names[-1] in ("k", "v")
+        is_mla = names[-1] in ("ckv", "k_rope")
+        is_conv = names[-1] == "conv"
+        is_ssd = names[-1] == "ssd"
+        b_dim = 1
+        if shape[b_dim] % max(
+            1, _prod(axis_size[a] for a in batch_axes)) == 0 and batch_axes:
+            spec[b_dim] = batch_spec
+        if is_attn_kv:
+            if seq_shard and "data" in mesh.axis_names:
+                spec[b_dim] = None if spec[b_dim] == "data" else (
+                    "pod" if spec[b_dim] == ("pod", "data") else spec[b_dim])
+                spec[3] = "data"  # sequence dim
+            if shape[2] % axis_size.get("model", 1) == 0:
+                spec[2] = "model"
+        elif is_mla:
+            if seq_shard and "data" in mesh.axis_names:
+                spec[2] = "data"
+        elif is_conv:
+            if shape[3] % axis_size.get("model", 1) == 0:
+                spec[3] = "model"
+        elif is_ssd:
+            if shape[2] % axis_size.get("model", 1) == 0:
+                spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def _prod(it):
+    out = 1
+    for x in it:
+        out *= x
+    return out

@@ -1,0 +1,29 @@
+"""Pallas TPU kernels for AnchorAttention + SSD, with jnp oracles in ref.py.
+
+Kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
+validated on CPU via interpret mode.
+"""
+
+from repro.kernels.ops import (
+    anchor_attention_pallas,
+    anchor_phase_pallas,
+    flash_attention,
+    flash_decode,
+    pack_stripe_indices,
+    sparse_attention_pallas,
+    ssd_chunked,
+    stripe_select_pallas,
+)
+from repro.kernels import ref
+
+__all__ = [
+    "anchor_attention_pallas",
+    "anchor_phase_pallas",
+    "flash_attention",
+    "flash_decode",
+    "pack_stripe_indices",
+    "sparse_attention_pallas",
+    "ssd_chunked",
+    "stripe_select_pallas",
+    "ref",
+]

@@ -1,0 +1,138 @@
+"""Pattern-based Anchor Computation — Pallas TPU kernel (paper Alg. 1).
+
+For every query block the kernel runs an online softmax over the *anchor
+region only*: KV block 0 (attention sink) plus the local diagonal window of
+its superblock.  It emits the running statistics ``(M, L, Acc)`` which the
+sparse kernel (Alg. 3) resumes — the paper's "temporarily cache the
+intermediate results … and reuse them" (§3.4).
+
+Grid: ``(batch*heads, T_m, 1 + step*r + r)``.  Window slot ``w=0`` is the
+init block; slots ``w>=1`` map to KV block ``w_start(k) + w - 1`` via the
+BlockSpec index map (clipped in the map, re-validated in-kernel against the
+unclipped candidate so aliased loads contribute nothing).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.config import AnchorConfig
+
+_NEG_INF = -1e30
+
+
+def _candidate_block(i, w, cfg: AnchorConfig):
+    """Unclipped KV block id for window slot ``w`` of query block ``i``."""
+    k = i // cfg.step
+    w_start = jnp.maximum(1, k * cfg.step * cfg.r)
+    return jnp.where(w == 0, 0, w_start + (w - 1))
+
+
+def _anchor_kernel(
+    q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, ms_ref, ls_ref, accs_ref,
+    *, cfg: AnchorConfig, scale: float, t_n: int
+):
+    i = pl.program_id(1)
+    w = pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _init():
+        ms_ref[...] = jnp.full_like(ms_ref, _NEG_INF)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+        accs_ref[...] = jnp.zeros_like(accs_ref)
+
+    blk = _candidate_block(i, w, cfg)
+    last_blk = i * cfg.r + cfg.r - 1
+    block_valid = (w == 0) | ((blk >= 1) & (blk <= last_blk) & (blk < t_n))
+
+    @pl.when(block_valid)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        row = i * cfg.block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        col = blk * cfg.block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(col <= row, s, _NEG_INF)
+        m_prev = ms_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        # Rows fully masked keep m == -inf; exp(-inf - -inf) guards below.
+        p = jnp.where(s <= _NEG_INF, 0.0, p)
+        alpha = jnp.exp(m_prev - m_new)
+        ls_ref[...] = ls_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        accs_ref[...] = accs_ref[...] * alpha + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        ms_ref[...] = m_new
+
+    @pl.when(w == pl.num_programs(2) - 1)
+    def _finish():
+        m_ref[0] = ms_ref[...][:, 0]
+        l_ref[0] = ls_ref[...][:, 0]
+        acc_ref[0] = accs_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def anchor_phase_pallas(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, cfg: AnchorConfig
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Alg. 1 for batched heads.  q: (B, Hq, N, D); k, v: (B, Hkv, N, D).
+
+    Returns ``(m, l, acc)`` with shapes (B, Hq, N), (B, Hq, N), (B, Hq, N, D)
+    in f32 — the anchor statistics.
+    """
+    batch, hq, n, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    t_m = cfg.num_q_blocks(n)
+    t_n = cfg.num_kv_blocks(n)
+    n_slots = 1 + cfg.step * cfg.r + cfg.r
+    scale = 1.0 / (d ** 0.5)
+
+    qf = q.reshape(batch * hq, n, d)
+    kf = k.reshape(batch * hkv, n, d)
+    vf = v.reshape(batch * hkv, n, d)
+
+    def kv_index(b, i, w):
+        blk = jnp.clip(_candidate_block(i, w, cfg), 0, t_n - 1)
+        return (b // hq) * hkv + (b % hq) // group, blk, 0
+
+    kernel = functools.partial(_anchor_kernel, cfg=cfg, scale=scale, t_n=t_n)
+    m, l, acc = pl.pallas_call(
+        kernel,
+        grid=(batch * hq, t_m, n_slots),
+        in_specs=[
+            pl.BlockSpec((1, cfg.block_q, d), lambda b, i, w: (b, i, 0)),
+            pl.BlockSpec((1, cfg.block_kv, d), kv_index),
+            pl.BlockSpec((1, cfg.block_kv, d), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cfg.block_q), lambda b, i, w: (b, i)),
+            pl.BlockSpec((1, cfg.block_q), lambda b, i, w: (b, i)),
+            pl.BlockSpec((1, cfg.block_q, d), lambda b, i, w: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch * hq, n), jnp.float32),
+            jax.ShapeDtypeStruct((batch * hq, n), jnp.float32),
+            jax.ShapeDtypeStruct((batch * hq, n, d), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((cfg.block_q, 1), jnp.float32),
+            pltpu.VMEM((cfg.block_q, 1), jnp.float32),
+            pltpu.VMEM((cfg.block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=cfg.interpret,
+    )(qf, kf, vf)
+    shape = (batch, hq, n)
+    return m.reshape(shape), l.reshape(shape), acc.reshape(batch, hq, n, d)

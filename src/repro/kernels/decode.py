@@ -1,0 +1,108 @@
+"""Flash-decode Pallas kernel: one-token attention over a KV cache.
+
+The TPU production path for the decode_32k / long_500k shapes: streams the
+cache through VMEM in ``block_s`` tiles with an online softmax carried in
+scratch — the kernel twin of the blockwise XLA path introduced in §Perf
+iteration A3 (scores never touch HBM).
+
+Grid: ``(batch*heads, S // block_s)`` with the cache axis sequential.
+``cache_len`` arrives as a scalar operand (replicated (1,1) block).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, ms_ref, ls_ref,
+                   acc_ref, *, block_s, scale):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        ms_ref[...] = jnp.full_like(ms_ref, _NEG_INF)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (1, D)
+    k = k_ref[0].astype(jnp.float32)  # (block_s, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (1, block_s)
+    col = j * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = col < len_ref[0, 0]
+    s = jnp.where(valid, s, _NEG_INF)
+    m_prev = ms_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    ls_ref[...] = ls_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    ms_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(ls_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,
+    block_s: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One-token decode attention.
+
+    q: (B, Hq, 1, D); caches: (B, Hkv, S, D); cache_len: () int32.
+    Returns (B, Hq, 1, D).
+    """
+    b, hq, _, d = q.shape
+    hkv, s_len = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    assert s_len % block_s == 0, (s_len, block_s)
+    scale = 1.0 / (d ** 0.5)
+
+    qf = q.reshape(b * hq, 1, d)
+    kf = k_cache.reshape(b * hkv, s_len, d)
+    vf = v_cache.reshape(b * hkv, s_len, d)
+    len_arr = jnp.full((1, 1), cache_len, jnp.int32)
+
+    def kv_index(bh, j):
+        return (bh // hq) * hkv + (bh % hq) // group, j, 0
+
+    kernel = functools.partial(_decode_kernel, block_s=block_s, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, s_len // block_s),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bh, j: (0, 0)),
+            pl.BlockSpec((1, 1, d), lambda bh, j: (bh, 0, 0)),
+            pl.BlockSpec((1, block_s, d), kv_index),
+            pl.BlockSpec((1, block_s, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bh, j: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(len_arr, qf, kf, vf)
+    return out.reshape(b, hq, 1, d)

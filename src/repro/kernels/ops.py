@@ -1,0 +1,105 @@
+"""Jitted wrappers composing the Pallas kernels into the full pipelines.
+
+``anchor_attention_pallas`` chains Alg. 1 → Alg. 2 → (XLA index packing) →
+Alg. 3.  The packing step converts the kernel's stripe hit-mask into dense
+``(T_s, capacity)`` gather indices — the static-shape TPU stand-in for the
+paper's dynamic index lists (DESIGN.md §3).  Packing is position-ordered and
+drops nothing when ``capacity >= max selected``, which tests assert.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import AnchorConfig
+from repro.kernels.anchor import anchor_phase_pallas
+from repro.kernels.decode import flash_decode
+from repro.kernels.flash import flash_attention
+from repro.kernels.sparse import sparse_attention_pallas
+from repro.kernels.ssd import ssd_chunked
+from repro.kernels.stripe_select import stripe_select_pallas
+
+__all__ = [
+    "flash_attention",
+    "flash_decode",
+    "anchor_phase_pallas",
+    "stripe_select_pallas",
+    "sparse_attention_pallas",
+    "ssd_chunked",
+    "anchor_attention_pallas",
+    "pack_stripe_indices",
+]
+
+
+def pack_stripe_indices(
+    hit: jnp.ndarray, capacity: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Compact a (…, T_s, N) int32 hit-mask into (…, T_s, capacity) indices.
+
+    Position-ordered packing: priority = hit*2 - pos/N, so selected stripes
+    come first (ascending position), padding after.  Returns (idx, valid).
+    """
+    n = hit.shape[-1]
+    pos = jnp.arange(n, dtype=jnp.float32) / n
+    priority = hit.astype(jnp.float32) * 2.0 - pos
+    _, idx = jax.lax.top_k(priority, capacity)
+    valid = jnp.take_along_axis(hit, idx, axis=-1)
+    return idx.astype(jnp.int32), valid.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_c", "return_stats"))
+def anchor_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: AnchorConfig,
+    block_c: int = 128,
+    return_stats: bool = False,
+):
+    """Full AnchorAttention via the Pallas kernels.
+
+    q: (B, Hq, N, D); k, v: (B, Hkv, N, D).  Returns (B, Hq, N, D).
+    """
+    batch, hq, n, d = q.shape
+    block_c = min(block_c, n)
+    hkv = k.shape[1]
+    t_m = cfg.num_q_blocks(n)
+
+    # Alg. 1 — anchor statistics.
+    m, l, acc = anchor_phase_pallas(q, k, v, cfg)
+
+    # Pooling (cheap XLA reductions feeding Alg. 2).
+    q_mean = jnp.mean(
+        q.reshape(batch, hq, t_m, cfg.block_q, d).astype(jnp.float32), axis=3
+    )
+    m_bar = jnp.mean(m.reshape(batch, hq, t_m, cfg.block_q), axis=3)
+    if not cfg.use_anchor:
+        m_bar = jnp.zeros_like(m_bar)
+
+    # Alg. 2 — stripe hit mask.
+    hit = stripe_select_pallas(q_mean, m_bar, k, cfg)  # (B, Hq, T_s, N)
+
+    # XLA packing + gather-compaction (TPU adaptation of discrete loading).
+    capacity = cfg.capacity if cfg.capacity is not None else n
+    capacity = max(block_c, min(capacity, n))
+    capacity = ((capacity + block_c - 1) // block_c) * block_c
+    idx, valid = pack_stripe_indices(hit, capacity)  # (B, Hq, T_s, C)
+
+    if hkv != hq:
+        rep = hq // hkv
+        k_full = jnp.repeat(k, rep, axis=1)
+        v_full = jnp.repeat(v, rep, axis=1)
+    else:
+        k_full, v_full = k, v
+    k_sel = jnp.take_along_axis(k_full[:, :, None], idx[..., None], axis=3)
+    v_sel = jnp.take_along_axis(v_full[:, :, None], idx[..., None], axis=3)
+
+    # Alg. 3 — resume the online softmax over gathered stripes.
+    out = sparse_attention_pallas(q, k_sel, v_sel, valid, m, l, acc, cfg, block_c)
+    if return_stats:
+        counts = hit.sum(axis=-1)  # (B, Hq, T_s)
+        return out, counts
+    return out

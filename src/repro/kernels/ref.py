@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are deliberately *dense* implementations (materialize the (N, N)
+score matrix, no online softmax, no blocking) so they share no code or
+numerical strategy with the kernels they check.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import AnchorConfig
+from repro.core import masks as masks_lib
+
+_NEG_INF = -1e30
+
+
+def _scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    d = q.shape[-1]
+    return (q.astype(jnp.float32) @ k.T.astype(jnp.float32)) / jnp.sqrt(
+        jnp.asarray(d, jnp.float32)
+    )
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Dense causal attention, one head, (N, D) -> (N, D)."""
+    n = q.shape[0]
+    s = jnp.where(masks_lib.causal_mask(n), _scores(q, k), _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+def anchor_phase_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, cfg: AnchorConfig
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Dense oracle of Alg. 1: (m, l, acc) over the anchor region."""
+    n = q.shape[0]
+    region = masks_lib.anchor_region_mask(n, cfg)
+    s = jnp.where(region, _scores(q, k), _NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[:, None])
+    p = jnp.where(region, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = p @ v.astype(jnp.float32)
+    return m, l, acc
+
+
+def stripe_mask_ref(
+    q: jnp.ndarray, k: jnp.ndarray, m: jnp.ndarray, cfg: AnchorConfig
+) -> jnp.ndarray:
+    """Dense oracle of Alg. 2: (T_s, N) bool stripe selection."""
+    n, d = q.shape
+    t_m = cfg.num_q_blocks(n)
+    t_s = cfg.num_superblocks(n)
+    q_mean = jnp.mean(q.reshape(t_m, cfg.block_q, d).astype(jnp.float32), axis=1)
+    s = (q_mean @ k.T.astype(jnp.float32)) / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    m_bar = jnp.mean(m.reshape(t_m, cfg.block_q), axis=1)
+    if not cfg.use_anchor:
+        m_bar = jnp.zeros_like(m_bar)
+    hit = (m_bar[:, None] - s) <= cfg.theta
+    hit = hit.reshape(t_s, cfg.step, n).any(axis=1)
+    kidx = jnp.arange(n)[None, :]
+    w_start_tok = (
+        jnp.maximum(1, jnp.arange(t_s) * cfg.step * cfg.r) * cfg.block_kv
+    )[:, None]
+    cand = (kidx >= cfg.block_kv) & (kidx < w_start_tok)
+    return hit & cand
+
+
+def anchor_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, cfg: AnchorConfig
+) -> jnp.ndarray:
+    """End-to-end dense oracle: softmax over (anchor region ∪ stripes)."""
+    n = q.shape[0]
+    m, _, _ = anchor_phase_ref(q, k, v, cfg)
+    stripes = stripe_mask_ref(q, k, m, cfg)  # (T_s, N)
+    per_row = jnp.repeat(stripes, cfg.step * cfg.block_q, axis=0)[:n]
+    mask = (per_row | masks_lib.anchor_region_mask(n, cfg)) & masks_lib.causal_mask(n)
+    s = jnp.where(mask, _scores(q, k), _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    h0: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential (recurrent) oracle of the Mamba2 SSD, one head.
+
+    Discretized recurrence (Dao & Gu 2024, state-space duality):
+      h_t = exp(dt_t * a) * h_{t-1} + dt_t * b_t ⊗ x_t
+      y_t = c_t @ h_t
+
+    Args:
+      x: (L, P) head inputs;  dt: (L,) positive step sizes;  a: () negative
+      scalar decay;  b, c: (L, S) input/output projections; h0: (S, P).
+
+    Returns:
+      y: (L, P), h_final: (S, P).
+    """
+    l, p = x.shape
+    s = b.shape[1]
+    h = jnp.zeros((s, p), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * a)
+        h = decay * h + dtt * bt[:, None] * xt[None, :]
+        y = ct @ h
+        return h, y
+
+    h, y = jax.lax.scan(
+        step, h, (x.astype(jnp.float32), dt.astype(jnp.float32),
+                  b.astype(jnp.float32), c.astype(jnp.float32))
+    )
+    return y.astype(x.dtype), h

@@ -1,0 +1,128 @@
+"""Fine-Grained Sparse Computation — Pallas kernel (paper Alg. 3).
+
+Resumes the online softmax from the anchor statistics ``(M, L, Acc)`` over
+*gathered* stripe tiles.  The discrete KV rows selected by Alg. 2 arrive
+pre-compacted into dense ``(T_s, capacity, d)`` tiles (XLA HBM→HBM gather —
+the TPU-native replacement for Triton's per-row global loads, DESIGN.md §3);
+the kernel itself streams those dense tiles through the MXU at full
+utilization, with a validity mask for the padded tail.
+
+Grid: ``(batch*heads, T_m, capacity // block_c)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.config import AnchorConfig
+
+_NEG_INF = -1e30
+
+
+def _sparse_kernel(
+    q_ref, ks_ref, vs_ref, valid_ref, m0_ref, l0_ref, acc0_ref, o_ref,
+    ms_ref, ls_ref, accs_ref, *, scale
+):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        ms_ref[...] = m0_ref[0][:, None]
+        ls_ref[...] = l0_ref[0][:, None]
+        accs_ref[...] = acc0_ref[0]
+
+    q = q_ref[0].astype(jnp.float32)
+    k = ks_ref[0, 0].astype(jnp.float32)
+    valid = valid_ref[0, 0] != 0  # (block_c,)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+    s = jnp.where(valid[None, :], s, _NEG_INF)
+    m_prev = ms_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid[None, :], p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    ls_ref[...] = ls_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    accs_ref[...] = accs_ref[...] * alpha + jax.lax.dot_general(
+        p, vs_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    ms_ref[...] = m_new
+
+    @pl.when(c == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (accs_ref[...] / ls_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_c"))
+def sparse_attention_pallas(
+    q: jnp.ndarray,
+    k_sel: jnp.ndarray,
+    v_sel: jnp.ndarray,
+    valid: jnp.ndarray,
+    m0: jnp.ndarray,
+    l0: jnp.ndarray,
+    acc0: jnp.ndarray,
+    cfg: AnchorConfig,
+    block_c: int = 128,
+) -> jnp.ndarray:
+    """Alg. 3 for batched heads.
+
+    Args:
+      q: (B, H, N, D) queries.
+      k_sel, v_sel: (B, H, T_s, C, D) gathered stripe tiles (C % block_c == 0).
+      valid: (B, H, T_s, C) int32 slot validity.
+      m0, l0: (B, H, N) anchor statistics;  acc0: (B, H, N, D).
+
+    Returns:
+      (B, H, N, D) final attention output (``acc/l``) in q.dtype.
+    """
+    batch, h, n, d = q.shape
+    t_s, cap = k_sel.shape[2], k_sel.shape[3]
+    t_m = cfg.num_q_blocks(n)
+    scale = 1.0 / (d ** 0.5)
+    assert cap % block_c == 0, (cap, block_c)
+
+    qf = q.reshape(batch * h, n, d)
+    ksf = k_sel.reshape(batch * h, t_s, cap, d)
+    vsf = v_sel.reshape(batch * h, t_s, cap, d)
+    vf = valid.reshape(batch * h, t_s, cap)
+    m0f = m0.reshape(batch * h, n)
+    l0f = l0.reshape(batch * h, n)
+    acc0f = acc0.reshape(batch * h, n, d)
+
+    def sel_index(b, i, c):
+        return b, i // cfg.step, c, 0
+
+    kernel = functools.partial(_sparse_kernel, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(batch * h, t_m, cap // block_c),
+        in_specs=[
+            pl.BlockSpec((1, cfg.block_q, d), lambda b, i, c: (b, i, 0)),
+            pl.BlockSpec((1, 1, block_c, d), sel_index),
+            pl.BlockSpec((1, 1, block_c, d), sel_index),
+            pl.BlockSpec((1, 1, block_c), lambda b, i, c: (b, i // cfg.step, c)),
+            pl.BlockSpec((1, cfg.block_q), lambda b, i, c: (b, i)),
+            pl.BlockSpec((1, cfg.block_q), lambda b, i, c: (b, i)),
+            pl.BlockSpec((1, cfg.block_q, d), lambda b, i, c: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cfg.block_q, d), lambda b, i, c: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch * h, n, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((cfg.block_q, 1), jnp.float32),
+            pltpu.VMEM((cfg.block_q, 1), jnp.float32),
+            pltpu.VMEM((cfg.block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=cfg.interpret,
+    )(qf, ksf, vsf, vf, m0f, l0f, acc0f)
+    return out.reshape(batch, h, n, d)

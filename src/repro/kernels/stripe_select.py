@@ -1,0 +1,101 @@
+"""Difference-aware Stripe Sparsity Identification — Pallas kernel (Alg. 2).
+
+Compare pooled-query × key scores against the pooled anchor; emit an int32
+stripe hit-mask per superblock.  Sort-free: a single VPU compare + OR-reduce
+over the ``step`` pooled rows (paper §3.2 — "avoiding costly sorting
+operations").
+
+Grid: ``(batch*heads, T_s, T_n)``; all axes parallel (no carry).  Output
+mask block is ``(1, 1, block_kv)`` int32 — the stripe coordinates stay in
+block-compressed form and are expanded to gather indices by the XLA packing
+step in :mod:`repro.kernels.ops` (TPU adaptation, DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.config import AnchorConfig
+
+
+def _select_kernel(qm_ref, mb_ref, k_ref, o_ref, *, cfg: AnchorConfig, scale, t_n):
+    s_idx = pl.program_id(1)
+    j = pl.program_id(2)
+    w_start = jnp.maximum(1, s_idx * cfg.step * cfg.r)
+    in_candidate = (j >= 1) & (j < w_start)
+
+    @pl.when(in_candidate)
+    def _compute():
+        qm = qm_ref[0].astype(jnp.float32)  # (step, d)
+        k = k_ref[0].astype(jnp.float32)  # (block_kv, d)
+        s = jax.lax.dot_general(
+            qm, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        diff = mb_ref[0][:, None] - s  # (step, block_kv)
+        hit = (diff <= cfg.theta).any(axis=0)
+        o_ref[0, 0] = hit.astype(jnp.int32)
+
+    @pl.when(jnp.logical_not(in_candidate))
+    def _skip():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def stripe_select_pallas(
+    q_mean: jnp.ndarray, m_bar: jnp.ndarray, k: jnp.ndarray, cfg: AnchorConfig
+) -> jnp.ndarray:
+    """Alg. 2 for batched heads.
+
+    Args:
+      q_mean: (B, Hq, T_m, D) block-pooled queries.
+      m_bar: (B, Hq, T_m) block-pooled anchors (zeros for the
+        "Without Anchor" ablation).
+      k: (B, Hkv, N, D) keys.
+
+    Returns:
+      (B, Hq, T_s, N) int32 hit mask (1 = stripe selected).
+    """
+    batch, hq, t_m, d = q_mean.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    n = k.shape[2]
+    t_n = cfg.num_kv_blocks(n)
+    t_s = cfg.num_superblocks(n)
+    scale = 1.0 / (d ** 0.5)
+
+    # Pad T_m up to T_s*step so the step-grouping is exact.
+    pad = t_s * cfg.step - t_m
+    if pad:
+        q_mean = jnp.pad(q_mean, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        m_bar = jnp.pad(m_bar, ((0, 0), (0, 0), (0, pad)), constant_values=jnp.inf)
+
+    qf = q_mean.reshape(batch * hq, t_s * cfg.step, d)
+    mf = m_bar.reshape(batch * hq, t_s * cfg.step)
+    kf = k.reshape(batch * hkv, n, d)
+
+    def kv_index(b, s, j):
+        del s
+        return (b // hq) * hkv + (b % hq) // group, j, 0
+
+    kernel = functools.partial(_select_kernel, cfg=cfg, scale=scale, t_n=t_n)
+    out = pl.pallas_call(
+        kernel,
+        grid=(batch * hq, t_s, t_n),
+        in_specs=[
+            pl.BlockSpec((1, cfg.step, d), lambda b, s, j: (b, s, 0)),
+            pl.BlockSpec((1, cfg.step), lambda b, s, j: (b, s)),
+            pl.BlockSpec((1, cfg.block_kv, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, cfg.block_kv), lambda b, s, j: (b, s, j)),
+        out_shape=jax.ShapeDtypeStruct((batch * hq, t_s, n), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")
+        ),
+        interpret=cfg.interpret,
+    )(qf, mf, kf)
+    return out.reshape(batch, hq, t_s, n)

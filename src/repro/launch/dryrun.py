@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any jax import (jax locks the device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell:
+  1. build the jitted step (train/prefill/decode — steps.py) with full
+     production shardings;
+  2. ``.lower().compile()`` on the 16×16 single-pod mesh and the 2×16×16
+     multi-pod mesh (512 placeholder CPU devices);
+  3. record ``memory_analysis()`` / ``cost_analysis()`` / HLO collective
+     bytes, plus the one-group probe for the scan-body cost correction;
+  4. write one JSON per cell to ``results/dryrun/`` (reruns skip complete
+     cells unless ``--force``).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi_9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+"""
+
+import argparse
+import ast
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shapes_for
+from repro.core.config import AnchorConfig
+from repro.launch import steps as steps_lib
+from repro.launch.hlo_analysis import summarize_compiled
+from repro.launch.mesh import make_production_mesh, mesh_num_devices
+from repro.launch.roofline import (
+    combine_scan_corrected,
+    model_flops,
+    roofline,
+)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../..", "results", "dryrun")
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    *,
+    probe: bool = True,
+    attn_impl: str | None = None,
+    remat: bool = True,
+    remat_policy: str = "nothing",
+    cfg_overrides: dict | None = None,
+    sp: bool = False,
+    accum_steps: int = 1,
+    anchor_capacity: int | None = None,
+    tag: str = "",
+) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = steps_lib.make_cell(arch, shape_name, attn_impl=attn_impl,
+                               cfg_overrides=cfg_overrides)
+    cfg = cell.cfg
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": cell.kind,
+        "attn_impl": cell.attn_impl,
+        "remat_policy": remat_policy,
+        "cfg_overrides": cfg_overrides or {},
+        "num_params": cfg.num_params(),
+        "num_active_params": cfg.num_active_params(),
+        "status": "error",
+    }
+    t0 = time.time()
+    try:
+        anchor_cfg = steps_lib.PROD_ANCHOR
+        if anchor_capacity is not None:
+            anchor_cfg = AnchorConfig(
+                theta=anchor_cfg.theta, step=anchor_cfg.step,
+                capacity=anchor_capacity)
+        fn, arg_specs = steps_lib.build_step(
+            arch, shape_name, mesh, attn_impl=attn_impl, remat=remat,
+            remat_policy=remat_policy, cfg_overrides=cfg_overrides, sp=sp,
+            accum_steps=accum_steps, anchor_cfg=anchor_cfg)
+        with mesh:
+            lowered = fn.lower(*arg_specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        full = summarize_compiled(compiled)
+        rec.update(full=full, lower_s=t_lower, compile_s=t_compile)
+
+        probe_stats = None
+        if probe and cfg.num_groups > 1:
+            pfn, pspecs = steps_lib.build_group_probe(
+                arch, shape_name, mesh, attn_impl=attn_impl, remat=remat,
+                remat_policy=remat_policy, cfg_overrides=cfg_overrides,
+                sp=sp)
+            with mesh:
+                pcompiled = pfn.lower(*pspecs).compile()
+            probe_stats = summarize_compiled(pcompiled)
+            rec["probe"] = probe_stats
+
+        corrected = combine_scan_corrected(full, probe_stats, cfg.num_groups)
+        rl = roofline(corrected, cfg, SHAPES[shape_name], cell.kind,
+                      mesh_num_devices(mesh))
+        rec.update(
+            corrected=corrected,
+            roofline=rl.as_dict(),
+            status="ok",
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = time.time() - t0
+    _write(rec, tag)
+    return rec
+
+
+def _cell_path(arch: str, shape: str, mesh: str, tag: str = "") -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh}{suffix}.json")
+
+
+def _write(rec: dict, tag: str = "") -> None:
+    with open(_cell_path(rec["arch"], rec["shape"], rec["mesh"], tag), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--attn-impl", default=None)
+    ap.add_argument("--remat-policy", default="nothing", choices=["nothing", "dots", "save_tp"])
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override, e.g. --set mla_absorb=True")
+    ap.add_argument("--sp", action="store_true",
+                    help="Megatron-SP activation sharding (§Perf)")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient-accumulation microbatch steps")
+    ap.add_argument("--anchor-capacity", type=int, default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = []
+        for arch in ARCH_IDS:
+            for shape in shapes_for(get_config(arch)):
+                cells.append((arch, shape.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True]
+    if args.single_pod_only:
+        meshes = [False]
+    if args.multi_pod_only or args.multi_pod:
+        meshes = [True]
+
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            path = _cell_path(arch, shape, mesh_name, args.tag)
+            if os.path.exists(path) and not args.force:
+                with open(path) as f:
+                    if json.load(f).get("status") == "ok":
+                        print(f"[skip] {arch} {shape} {mesh_name}")
+                        continue
+            overrides = {}
+            for kv in args.set:
+                key, val = kv.split("=", 1)
+                overrides[key] = ast.literal_eval(val)
+            rec = run_cell(arch, shape, mp, probe=not args.no_probe,
+                           attn_impl=args.attn_impl,
+                           remat_policy=args.remat_policy,
+                           cfg_overrides=overrides or None, sp=args.sp,
+                           accum_steps=args.accum,
+                           anchor_capacity=args.anchor_capacity,
+                           tag=args.tag)
+            rl = rec.get("roofline", {})
+            print(
+                f"[{rec['status']:5s}] {arch:24s} {shape:12s} {mesh_name:8s} "
+                f"compile={rec.get('compile_s', 0):6.1f}s "
+                f"bottleneck={rl.get('bottleneck', '-'):10s} "
+                f"step={rl.get('step_s', 0):9.4f}s "
+                f"useful={rl.get('useful_ratio', 0):6.3f}"
+                + (f"  ERR {rec.get('error', '')[:120]}" if rec["status"] != "ok" else "")
+            )
+
+
+if __name__ == "__main__":
+    main()

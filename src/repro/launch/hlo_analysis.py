@@ -1,0 +1,117 @@
+"""Post-compile HLO analysis: collective wire bytes + cost/memory summary.
+
+``collective_bytes`` parses the optimized (post-SPMD) HLO text and sums the
+per-device wire bytes of every collective, using ring-algorithm formulas:
+
+    all-reduce        2 · B · (g-1)/g     (reduce-scatter + all-gather ring)
+    all-gather        B_result · (g-1)/g
+    reduce-scatter    B_result · (g-1)    (result is the per-device shard)
+    all-to-all        B · (g-1)/g
+    collective-permute B                  (point-to-point)
+
+where g = replica-group size parsed from the op attributes.  Collectives
+inside a `while` body are counted ONCE by this parser (XLA prints the body
+once); the dry-run corrects with the one-group probe (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|pred|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every typed shape in a result-type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)  # iota v2: [num_groups,group_size]
+    if m:
+        return int(m.group(2))
+    return 2  # conservative default (permutes etc.)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, Any]:
+    """Per-device wire bytes by collective kind, plus op counts."""
+    out: dict[str, Any] = {k: 0.0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # Result type precedes "op-name(" — e.g.
+        #   %ar = f32[16]{0} all-reduce(f32[16]{0} %x), replica_groups=...
+        m = re.search(r"=\s+((?:\([^)]*\))|(?:\S+))\s+(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(", stripped)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        if op + "-done(" in stripped:
+            continue  # bytes counted at -start
+        nbytes = _shape_bytes(result_type)
+        g = _group_size(stripped)
+        if op == "all-reduce":
+            wire = 2.0 * nbytes * (g - 1) / g
+        elif op == "all-gather":
+            wire = nbytes * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = nbytes * (g - 1)
+        elif op == "all-to-all":
+            wire = nbytes * (g - 1) / g
+        else:  # collective-permute
+            wire = float(nbytes)
+        out[op] += wire
+        counts[op] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def summarize_compiled(compiled) -> dict[str, Any]:
+    """flops / bytes / memory / collectives for one compiled executable."""
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    coll = collective_bytes(text) if text else {"total": 0.0, "counts": {}}
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        "peak_bytes_per_device": int(
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0)
+        ),
+        "collectives": coll,
+    }

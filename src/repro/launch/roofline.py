@@ -1,0 +1,150 @@
+"""Three-term roofline model for TPU v5e from the compiled dry-run.
+
+Terms (seconds, per device, per step):
+
+    compute_s    = FLOPs_per_device / 197e12          (bf16 peak)
+    memory_s     = HBM_bytes_per_device / 819e9
+    collective_s = wire_bytes_per_device / 50e9       (per-link ICI)
+
+FLOPs/bytes come from ``cost_analysis`` with the scan correction
+``total = full + (G-1) × group_probe`` (XLA-CPU counts while bodies once —
+calibrated in DESIGN.md §7).  MODEL_FLOPS is the assignment's headline
+``6·N·D`` (train) / ``2·N·D`` (inference) with N = (active) params,
+D = tokens; the ratio MODEL_FLOPS/HLO_FLOPS exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.models.config import ModelConfig
+from repro.configs import ShapeSpec
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_global: float
+    hlo_flops_device: float
+    useful_ratio: float  # MODEL_FLOPS / (HLO_FLOPS × n_devices)
+    bottleneck: str
+    step_s: float  # max of the three terms (no-overlap lower bound)
+
+    def as_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec, kind: str) -> float:
+    """Assignment headline FLOPs: 6·N_active·D (train), 2·N_active·D
+    (prefill), 2·N_active·B (decode, D=1 token/seq) + attention term."""
+    n_active = cfg.num_active_params()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        base = 6.0 * n_active * tokens
+        attn = _attention_flops(cfg, shape, causal=True) * 3.0  # fwd+bwd
+    elif kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        base = 2.0 * n_active * tokens
+        attn = _attention_flops(cfg, shape, causal=True)
+    else:  # decode: one token per sequence against a seq_len cache
+        tokens = shape.global_batch * 1
+        base = 2.0 * n_active * tokens
+        attn = _decode_attention_flops(cfg, shape)
+    return base + attn
+
+
+def _num_attn_layers(cfg: ModelConfig) -> int:
+    return sum(1 for m, _ in cfg.group_layout() if m == "attn") * cfg.num_groups
+
+
+def _attention_flops(cfg: ModelConfig, shape: ShapeSpec, causal: bool) -> float:
+    """QK^T + PV matmul FLOPs over the causal triangle (dense attention)."""
+    layers = _num_attn_layers(cfg)
+    if layers == 0:
+        return 0.0
+    n, b = shape.seq_len, shape.global_batch
+    d_qk = cfg.head_dim if not cfg.use_mla else (cfg.qk_nope_dim + cfg.qk_rope_dim)
+    d_v = cfg.head_dim if not cfg.use_mla else cfg.v_head_dim
+    pairs = n * (n + 1) / 2 if causal else float(n) * n
+    return 2.0 * b * cfg.num_heads * pairs * (d_qk + d_v) * layers
+
+
+def _decode_attention_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    layers = _num_attn_layers(cfg)
+    n, b = shape.seq_len, shape.global_batch
+    d_qk = cfg.head_dim if not cfg.use_mla else (cfg.qk_nope_dim + cfg.qk_rope_dim)
+    d_v = cfg.head_dim if not cfg.use_mla else cfg.v_head_dim
+    return 2.0 * b * cfg.num_heads * n * (d_qk + d_v) * layers
+
+
+def anchor_attention_flops(
+    cfg: ModelConfig, shape: ShapeSpec, capacity: int, step: int, block: int = 128
+) -> float:
+    """AnchorAttention prefill FLOPs at full capacity utilization (upper
+    bound): anchor window + pooled identification + capacity stripes."""
+    layers = _num_attn_layers(cfg)
+    if layers == 0:
+        return 0.0
+    n, b = shape.seq_len, shape.global_batch
+    d_qk = cfg.head_dim if not cfg.use_mla else (cfg.qk_nope_dim + cfg.qk_rope_dim)
+    d_v = cfg.head_dim if not cfg.use_mla else cfg.v_head_dim
+    t_m = n // block
+    window_cols = min((step + 2) * block, n)
+    anchor = 2.0 * n * window_cols * (d_qk + d_v)
+    identify = 2.0 * t_m * n * d_qk
+    sparse = 2.0 * n * capacity * (d_qk + d_v)
+    return b * cfg.num_heads * (anchor + identify + sparse) * layers
+
+
+def combine_scan_corrected(
+    full: dict[str, Any], probe: dict[str, Any] | None, num_groups: int
+) -> dict[str, float]:
+    """total = full + (G-1) × probe   for flops / bytes / collective bytes."""
+    g = max(1, num_groups)
+    if probe is None or g == 1:
+        return {
+            "flops": full["flops"],
+            "bytes_accessed": full["bytes_accessed"],
+            "collective_bytes": full["collectives"]["total"],
+        }
+    return {
+        "flops": full["flops"] + (g - 1) * probe["flops"],
+        "bytes_accessed": full["bytes_accessed"] + (g - 1) * probe["bytes_accessed"],
+        "collective_bytes": full["collectives"]["total"]
+        + (g - 1) * probe["collectives"]["total"],
+    }
+
+
+def roofline(
+    corrected: dict[str, float],
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    kind: str,
+    n_devices: int,
+) -> Roofline:
+    compute_s = corrected["flops"] / PEAK_FLOPS
+    memory_s = corrected["bytes_accessed"] / HBM_BW
+    collective_s = corrected["collective_bytes"] / ICI_BW
+    mf = model_flops(cfg, shape, kind)
+    hlo_total = corrected["flops"] * n_devices
+    ratio = mf / hlo_total if hlo_total > 0 else 0.0
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        model_flops_global=mf,
+        hlo_flops_device=corrected["flops"],
+        useful_ratio=ratio,
+        bottleneck=bottleneck,
+        step_s=max(terms.values()),
+    )

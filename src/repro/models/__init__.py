@@ -1,0 +1,8 @@
+"""Model zoo: composable layer library + decoder stacks for all assigned archs."""
+
+from repro.models.config import ModelConfig
+from repro.models import attention, layers, model, moe, ssm, transformer
+
+__all__ = [
+    "ModelConfig", "attention", "layers", "model", "moe", "ssm", "transformer",
+]

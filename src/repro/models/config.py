@@ -1,0 +1,164 @@
+"""Model architecture configuration.
+
+One frozen dataclass describes every assigned architecture family:
+dense GQA transformers, MoE (incl. MLA), pure SSM (Mamba2), hybrid
+(Jamba-style 1-in-``attn_period`` attention), and the embed-input stubs for
+the audio/VLM archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "audio", "vlm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # Attention flavour.
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    mlp_act: str = "silu"  # "silu" (SwiGLU) | "gelu" (GeGLU, gemma)
+
+    # MoE.
+    num_experts: int = 0
+    experts_top_k: int = 0
+    moe_period: int = 1  # MoE FFN every k-th layer (jamba: 2)
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0  # expert hidden dim (defaults to d_ff)
+
+    # MLA (DeepSeek-V2).
+    use_mla: bool = False
+    mla_absorb: bool = False  # absorbed-matmul decode (beyond-paper, §Perf)
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 64
+    qk_nope_dim: int = 128
+    v_head_dim: int = 128
+
+    # SSM / hybrid.
+    attn_period: int = 0  # hybrid: 1 attention layer per `attn_period`
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+
+    # IO.
+    embed_input: bool = False  # audio/vlm stubs feed embeddings directly
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+
+    # Which attention layers can use AnchorAttention for prefill
+    # (False only for the attention-free mamba2 — DESIGN.md §5).
+    @property
+    def has_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if prefill/decode memory is sub-quadratic in seq len
+        (SSM/hybrid archs run the long_500k shape)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def expert_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def group_size(self) -> int:
+        """Layers per scan group (hybrid interleaves inside one group)."""
+        if self.family == "hybrid":
+            return self.attn_period
+        return 1
+
+    def group_layout(self) -> tuple[tuple[str, str], ...]:
+        """(mixer, ffn) per layer inside one scan group.
+
+        mixer ∈ {"attn", "mamba"}; ffn ∈ {"dense", "moe", "none"}.
+        """
+        if self.family == "ssm":
+            return (("mamba", "none"),)
+        if self.family == "hybrid":
+            layout = []
+            attn_idx = self.attn_period // 2  # Jamba: attention mid-group
+            for i in range(self.attn_period):
+                mixer = "attn" if i == attn_idx else "mamba"
+                ffn = "moe" if (self.num_experts and i % self.moe_period == 1) else "dense"
+                layout.append((mixer, ffn))
+            return tuple(layout)
+        ffn = "moe" if self.num_experts else "dense"
+        return (("attn", ffn),)
+
+    @property
+    def num_groups(self) -> int:
+        assert self.num_layers % self.group_size == 0, (
+            self.num_layers, self.group_size)
+        return self.num_layers // self.group_size
+
+    def num_params(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d = self.d_model
+        total = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            total += self.vocab_size * d
+        for mixer, ffn in self.group_layout() * self.num_groups:
+            if mixer == "attn":
+                if self.use_mla:
+                    qk = self.qk_nope_dim + self.qk_rope_dim
+                    total += d * self.num_heads * qk  # wq
+                    total += d * (self.kv_lora_rank + self.qk_rope_dim)
+                    total += self.kv_lora_rank * self.num_heads * (
+                        self.qk_nope_dim + self.v_head_dim)
+                    total += self.num_heads * self.v_head_dim * d  # wo
+                else:
+                    total += d * self.num_heads * self.head_dim
+                    total += 2 * d * self.num_kv_heads * self.head_dim
+                    total += self.num_heads * self.head_dim * d
+            else:  # mamba
+                di, s, h = self.ssm_d_inner, self.ssm_state, self.ssm_heads
+                total += d * 2 * di  # xz
+                total += d * 2 * s  # BC
+                total += d * h  # dt
+                total += self.ssm_conv * di  # conv
+                total += di * d  # out
+            if ffn == "dense":
+                total += 3 * d * self.d_ff
+            elif ffn == "moe":
+                e = self.num_experts + self.num_shared_experts
+                total += 3 * d * self.expert_d_ff * e
+                total += d * self.num_experts  # router
+            total += 2 * d  # norms
+        return total
+
+    def num_active_params(self) -> int:
+        """Parameters touched per token (MoE top-k active)."""
+        if not self.num_experts:
+            return self.num_params()
+        d = self.d_model
+        total = self.num_params()
+        # Subtract inactive routed experts' FFN weights.
+        n_moe_layers = sum(
+            1 for _, f in self.group_layout() if f == "moe"
+        ) * self.num_groups
+        inactive = self.num_experts - self.experts_top_k
+        total -= n_moe_layers * 3 * d * self.expert_d_ff * inactive
+        return total

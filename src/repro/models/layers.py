@@ -1,0 +1,169 @@
+"""Primitive layers: norms, RoPE, MLPs, blockwise attention math.
+
+Functional style: ``init_*`` builds a param dict, ``apply`` fns are pure.
+Weights live in the config dtype (bf16 by default); all reductions and
+softmax statistics are f32.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+_NEG_INF = -1e30
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / (in_dim ** 0.5)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm_init(dim: int) -> Params:
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(x: jnp.ndarray, p: Params, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE ----
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- MLP ----
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d_model, d_ff, dtype),
+        "wg": dense_init(k2, d_model, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(x: jnp.ndarray, p: Params, act: str = "silu") -> jnp.ndarray:
+    """Gated MLP: SwiGLU (silu) or GeGLU (gelu — gemma)."""
+    gate = x @ p["wg"]
+    gate = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)
+    return (gate * (x @ p["wi"])) @ p["wo"]
+
+
+# --------------------------------------------- blockwise dense attention ----
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "causal"))
+def blockwise_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    block_kv: int = 1024,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Memory-efficient causal attention — the XLA 'full attention' path.
+
+    Online-softmax scan over KV blocks; never materializes (N, N).
+    q: (B, Hq, N, D); k, v: (B, Hkv, S, D).  Differentiable (scan AD).
+    """
+    b, hq, n, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    dv = v.shape[-1]  # may differ from d (MLA)
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = 1.0 / (d ** 0.5)
+    if s % block_kv:
+        pad = block_kv - s % block_kv
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        s_pad = s + pad
+    else:
+        s_pad = s
+    nblk = s_pad // block_kv
+    kb = jnp.moveaxis(k.reshape(b, hq, nblk, block_kv, d), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, hq, nblk, block_kv, dv), 2, 0)
+    qf = q.astype(jnp.float32)
+    rows = jnp.arange(n)
+
+    def step(carry, inp):
+        m, l, acc, j = carry
+        kj, vj = inp
+        sc = jnp.einsum("bhqd,bhkd->bhqk", qf, kj.astype(jnp.float32)) * scale
+        cols = j * block_kv + jnp.arange(block_kv)
+        valid = cols[None, :] < s
+        if causal:
+            valid = valid & (cols[None, :] <= rows[:, None])
+        sc = jnp.where(valid[None, None], sc, _NEG_INF)
+        m_new = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - m_new[..., None])
+        p = jnp.where(valid[None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vj.astype(jnp.float32))
+        return (m_new, l, acc, j + 1), None
+
+    init = (
+        jnp.full((b, hq, n), _NEG_INF, jnp.float32),
+        jnp.zeros((b, hq, n), jnp.float32),
+        jnp.zeros((b, hq, n, dv), jnp.float32),
+        jnp.asarray(0, jnp.int32),
+    )
+    (m, l, acc, _), _ = jax.lax.scan(step, init, (kb, vb))
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,
+) -> jnp.ndarray:
+    """One-token decode attention over a (possibly partially filled) cache.
+
+    q: (B, Hq, 1, D); caches: (B, Hkv, S, D); cache_len: () int — number of
+    valid cache positions (includes the current token).
+    """
+    b, hq, _, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    if hkv != hq:
+        rep = hq // hkv
+        k_cache = jnp.repeat(k_cache, rep, axis=1)
+        v_cache = jnp.repeat(v_cache, rep, axis=1)
+    scale = 1.0 / (d ** 0.5)
+    sc = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    valid = jnp.arange(s)[None, None, None, :] < cache_len
+    sc = jnp.where(valid, sc, _NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

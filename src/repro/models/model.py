@@ -1,0 +1,182 @@
+"""LM wrapper: embeddings (or embed-input stubs), decoder stack, head, loss.
+
+``init`` builds real parameters (smoke tests / examples); the dry-run uses
+``jax.eval_shape(init, ...)`` so full-size configs never allocate.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import AnchorConfig
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm, rmsnorm_init
+from repro.models.moe import MoEParallelism
+
+Params = dict[str, Any]
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    ke, ks, kh = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    p: Params = {
+        "embed": (
+            jax.random.normal(ke, (cfg.vocab_size, cfg.d_model), jnp.float32)
+            * 0.02
+        ).astype(dt),
+        "blocks": transformer.stack_init(ks, cfg),
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (
+            jax.random.normal(kh, (cfg.vocab_size, cfg.d_model), jnp.float32)
+            * 0.02
+        ).astype(dt)
+    return p
+
+
+def _logits(x: jnp.ndarray, params: Params) -> jnp.ndarray:
+    head = params.get("lm_head", params["embed"])
+    return jnp.einsum("bnd,vd->bnv", x, head)
+
+
+def forward(
+    params: Params,
+    tokens: jnp.ndarray | None,
+    cfg: ModelConfig,
+    *,
+    embeds: jnp.ndarray | None = None,
+    positions: jnp.ndarray | None = None,
+    attn_impl: str = "dense",
+    anchor_cfg: AnchorConfig | None = None,
+    ssm_impl: str = "xla",
+    remat: bool = True,
+    remat_policy: str = "nothing",
+    moe_parallel: MoEParallelism | None = None,
+    sp_spec=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Prefill forward pass -> (logits (B, N, V), aux_loss)."""
+    if cfg.embed_input:
+        assert embeds is not None, f"{cfg.name} takes precomputed embeddings"
+        x = embeds.astype(jnp.dtype(cfg.dtype))
+        b, n = x.shape[:2]
+    else:
+        assert tokens is not None
+        x = jnp.take(params["embed"], tokens, axis=0)
+        b, n = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(n), (b, n))
+    x, aux = transformer.stack_apply(
+        x, params["blocks"], cfg, positions,
+        attn_impl=attn_impl, anchor_cfg=anchor_cfg, ssm_impl=ssm_impl,
+        remat=remat, remat_policy=remat_policy, moe_parallel=moe_parallel,
+        sp_spec=sp_spec)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(x, params), aux
+
+
+def loss_fn(
+    params: Params,
+    batch: dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    attn_impl: str = "dense",
+    anchor_cfg: AnchorConfig | None = None,
+    aux_weight: float = 0.01,
+    remat: bool = True,
+    remat_policy: str = "nothing",
+    moe_parallel: MoEParallelism | None = None,
+    sp_spec=None,
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
+    """Next-token cross-entropy (+ MoE aux).  batch: tokens/embeds, labels."""
+    logits, aux = forward(
+        params,
+        batch.get("tokens"),
+        cfg,
+        embeds=batch.get("embeds"),
+        attn_impl=attn_impl,
+        anchor_cfg=anchor_cfg,
+        remat=remat,
+        remat_policy=remat_policy,
+        moe_parallel=moe_parallel,
+        sp_spec=sp_spec,
+    )
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = nll + aux_weight * aux
+    return total, {"nll": nll, "aux": aux}
+
+
+def prefill(
+    params: Params,
+    tokens: jnp.ndarray | None,
+    cfg: ModelConfig,
+    *,
+    embeds: jnp.ndarray | None = None,
+    attn_impl: str = "anchor",
+    anchor_cfg: AnchorConfig | None = None,
+    ssm_impl: str = "xla",
+    moe_parallel: MoEParallelism | None = None,
+) -> tuple[jnp.ndarray, Params]:
+    """Serving prefill: last-position logits + populated per-layer cache.
+
+    This is the step the paper accelerates — ``attn_impl="anchor"`` runs
+    AnchorAttention on every attention layer (falls back to dense for
+    attention-free archs via the caller).
+    """
+    if not cfg.has_attention:
+        attn_impl = "dense"  # mamba2: no attention layers to sparsify
+    if cfg.embed_input:
+        assert embeds is not None
+        x = embeds.astype(jnp.dtype(cfg.dtype))
+        b, n = x.shape[:2]
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+        b, n = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(n), (b, n))
+    x, _, cache = transformer.stack_apply(
+        x, params["blocks"], cfg, positions,
+        attn_impl=attn_impl, anchor_cfg=anchor_cfg, ssm_impl=ssm_impl,
+        remat=False, return_cache=True, moe_parallel=moe_parallel)
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return _logits(x, params)[:, 0], cache
+
+
+def decode_step(
+    params: Params,
+    cache: Params,
+    token: jnp.ndarray,
+    pos: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    embed: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, Params]:
+    """One decode step.  token: (B,) int32 (or embed (B, 1, d)); pos: ().
+
+    Returns (logits (B, V), new_cache).
+    """
+    if cfg.embed_input:
+        assert embed is not None
+        x = embed.astype(jnp.dtype(cfg.dtype))
+    else:
+        x = jnp.take(params["embed"], token[:, None], axis=0)
+    x, new_cache = transformer.stack_decode(x, params["blocks"], cache, cfg, pos)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(x, params)[:, 0], new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    return transformer.stack_cache_init(cfg, batch, max_len)
+
+
+def param_count(params: Params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

@@ -1,0 +1,184 @@
+"""Mamba2 block (SSD — state-space duality) for the ssm/hybrid archs.
+
+Prefill uses the chunked SSD scan (XLA path mirrors the Pallas kernel in
+``repro.kernels.ssd``; ``ssm_impl="pallas"`` switches to the kernel).
+Decode is the O(1) recurrence over carried (conv, ssd) state.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+Params = dict[str, Any]
+
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    d, di, s, h = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "w_xz": dense_init(ks[0], d, 2 * di, dt),
+        "w_bc": dense_init(ks[1], d, 2 * s, dt),
+        "w_dt": dense_init(ks[2], d, h, dt),
+        "conv_w": (jax.random.normal(ks[3], (cfg.ssm_conv, di), jnp.float32) * 0.2).astype(dt),
+        "a_log": jnp.zeros((h,), jnp.float32),  # A = -exp(a_log) ∈ (-∞, 0)
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus ≈ 0.13
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "w_out": dense_init(ks[4], di, d, dt),
+        "out_norm": rmsnorm_init(di),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv.  x: (B, L, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _ssd_chunked_xla(x, dtv, a, bmat, cmat, chunk: int):
+    """Chunked SSD, pure XLA (same math as kernels/ssd.py).
+
+    x: (B, L, H, P); dtv: (B, L, H); a: (H,); bmat/cmat: (B, L, S).
+    Returns y: (B, L, H, P).
+    """
+    b, l, h, p = x.shape
+    s = bmat.shape[-1]
+    nc = l // chunk
+    xc = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dtv.reshape(b, nc, chunk, h).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, chunk, s).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, chunk, s).astype(jnp.float32)
+
+    da = dtc * a  # (B, nc, chunk, H)
+    cum = jnp.cumsum(da, axis=2)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    gram = jnp.einsum("bncs,bnjs->bncj", cc, bc)  # (B,nc,chunk,chunk)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,i,j,H)
+    w = jnp.where(causal[None, None, :, :, None], gram[..., None] * decay, 0.0)
+    w = w * dtc[:, :, None, :, :]  # weight by dt_j
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", w, xc)
+
+    # Inter-chunk: sequential state pass over chunks.
+    chunk_decay = jnp.exp(cum[:, :, -1])  # (B, nc, H)
+    tail = jnp.exp(cum[:, :, -1:, :] - cum) * dtc  # (B,nc,chunk,H)
+    state_in = jnp.einsum("bnjs,bnjh,bnjhp->bnhsp", bc, tail, xc)
+
+    def step(h_prev, inp):
+        dec, sin = inp  # (B,H), (B,H,S,P)
+        h_new = h_prev * dec[..., None, None] + sin
+        return h_new, h_prev
+
+    h0 = jnp.zeros((b, h, s, p), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(state_in, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B, nc, H, S, P)
+    y_inter = jnp.einsum("bncs,bnhsp->bnchp", cc, h_prevs) * jnp.exp(cum)[..., None]
+    return (y_intra + y_inter).reshape(b, l, h, p), h_final
+
+
+def mamba_apply(
+    x: jnp.ndarray,
+    p: Params,
+    cfg: ModelConfig,
+    *,
+    ssm_impl: str = "xla",
+    chunk: int = 128,
+    return_cache: bool = False,
+):
+    """Prefill Mamba2.  x: (B, L, d_model)."""
+    b, l, _ = x.shape
+    di, s, h, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+
+    xz = x @ p["w_xz"]
+    xs_raw, z = jnp.split(xz, 2, axis=-1)
+    xs = _causal_conv(xs_raw, p["conv_w"])
+    xs = jax.nn.silu(xs)
+    bcv = x @ p["w_bc"]
+    bmat, cmat = jnp.split(bcv, 2, axis=-1)  # (B, L, S) each (G=1 group)
+    dtv = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])  # (H,)
+
+    xh = xs.reshape(b, l, h, hd)
+    if ssm_impl == "pallas":
+        from repro.kernels import ssd_chunked
+
+        # Kernel operates per (batch*head); fold heads into the batch dim.
+        xk = jnp.moveaxis(xh, 2, 1).reshape(b * h, l, hd)
+        dtk = jnp.moveaxis(dtv, 2, 1).reshape(b * h, l)
+        ak = jnp.tile(a, b)
+        bk = jnp.repeat(bmat, h, axis=0).reshape(b * h, l, s)
+        ck = jnp.repeat(cmat, h, axis=0).reshape(b * h, l, s)
+        y, hfin = ssd_chunked(xk, dtk, ak, bk, ck, chunk=chunk)
+        y = jnp.moveaxis(y.reshape(b, h, l, hd), 1, 2)
+        h_final = hfin.reshape(b, h, s, hd)
+    else:
+        y, h_final = _ssd_chunked_xla(xh, dtv, a, bmat, cmat, chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, l, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    if return_cache:
+        cache = {
+            "conv": xs_raw[:, l - (cfg.ssm_conv - 1):, :],
+            "ssd": h_final,  # (B, H, S, P) f32
+        }
+        return out, cache
+    return out
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_d_inner), dt),
+        "ssd": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32
+        ),
+    }
+
+
+def mamba_decode(
+    x: jnp.ndarray, p: Params, cache: Params, cfg: ModelConfig
+) -> tuple[jnp.ndarray, Params]:
+    """One-token decode.  x: (B, 1, d_model)."""
+    b = x.shape[0]
+    di, s, h, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    xz = x @ p["w_xz"]
+    xs, z = jnp.split(xz, 2, axis=-1)  # (B, 1, di)
+    conv_buf = jnp.concatenate([cache["conv"], xs], axis=1)  # (B, K, di)
+    w = p["conv_w"].astype(jnp.float32)
+    xs = jnp.einsum("bkc,kc->bc", conv_buf.astype(jnp.float32), w)[:, None, :]
+    xs = jax.nn.silu(xs).astype(x.dtype)
+    new_conv = conv_buf[:, 1:]
+
+    bcv = x @ p["w_bc"]
+    bmat, cmat = jnp.split(bcv, 2, axis=-1)  # (B, 1, S)
+    dtv = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B, H)
+    a = -jnp.exp(p["a_log"])
+
+    xh = xs.reshape(b, h, hd).astype(jnp.float32)
+    decay = jnp.exp(dtv * a)  # (B, H)
+    h_new = cache["ssd"] * decay[..., None, None] + jnp.einsum(
+        "bs,bh,bhp->bhsp", bmat[:, 0].astype(jnp.float32), dtv, xh
+    )
+    y = jnp.einsum("bs,bhsp->bhp", cmat[:, 0].astype(jnp.float32), h_new)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    return y @ p["w_out"], {"conv": new_conv, "ssd": h_new}

@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, apply_updates, global_norm, init
+from repro.optim import compression, schedules
+
+__all__ = ["AdamWConfig", "AdamWState", "apply_updates", "global_norm",
+           "init", "compression", "schedules"]

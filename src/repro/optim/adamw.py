@@ -1,0 +1,92 @@
+"""AdamW with decoupled weight decay, f32 master weights and ZeRO-friendly
+state layout.
+
+The optimizer state stores f32 master params + (m, v) moments.  Model params
+may be bf16; ``apply_updates`` casts the refreshed master back to the param
+dtype.  Every state leaf mirrors the param tree, so sharding rules extend to
+the optimizer state (ZeRO-1 shards them along ``data`` — see
+``repro.distributed.sharding``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    master: Params  # f32 copy of params
+    m: Params
+    v: Params
+
+
+def init(params: Params) -> AdamWState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def apply_updates(
+    params: Params,
+    grads: Params,
+    state: AdamWState,
+    cfg: AdamWConfig,
+    lr_scale: jnp.ndarray | float = 1.0,
+) -> tuple[Params, AdamWState, dict[str, jnp.ndarray]]:
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, master, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        update = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        master = master - lr * (update + cfg.weight_decay * master)
+        return master, m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_ma = jax.tree.leaves(state.master)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    new = [upd(g, ma, m, v) for g, ma, m, v in zip(flat_g, flat_ma, flat_m, flat_v)]
+    master = treedef.unflatten([x[0] for x in new])
+    m_tree = treedef.unflatten([x[1] for x in new])
+    v_tree = treedef.unflatten([x[2] for x in new])
+    new_params = jax.tree.map(
+        lambda ma, p: ma.astype(p.dtype), master, params)
+    return (
+        new_params,
+        AdamWState(step=step, master=master, m=m_tree, v=v_tree),
+        {"grad_norm": gnorm, "lr": jnp.asarray(lr)},
+    )

@@ -1,0 +1,18 @@
+"""LR schedules (pure functions of the step, safe inside jit)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_cosine(step, warmup: int, total: int, floor: float = 0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(s / max(1, warmup), 1.0)
+    frac = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return warm * cos
+
+
+def constant(step, value: float = 1.0):
+    del step
+    return value

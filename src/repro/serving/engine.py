@@ -1,0 +1,155 @@
+"""Serving engine: AnchorAttention prefill + KV-cache decode with
+continuous batching (lite).
+
+The engine keeps a fixed pool of ``max_batch`` slots.  Incoming requests
+prefill with the paper's AnchorAttention (the whole point: prefill is the
+quadratic phase), then join the decode batch; finished sequences free their
+slot for queued requests.  All compute paths are the jitted model fns —
+the scheduler is plain Python (it runs on the host in production too).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import AnchorConfig
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        params: Any,
+        cfg: ModelConfig,
+        max_batch: int = 8,
+        max_len: int = 2048,
+        anchor_cfg: AnchorConfig | None = None,
+        attn_impl: str = "anchor",
+        greedy: bool = True,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.anchor_cfg = anchor_cfg
+        self.attn_impl = attn_impl if cfg.has_attention else "dense"
+        self.greedy = greedy
+        self.cache = model_lib.init_cache(cfg, max_batch, max_len)
+        self.slot_pos = np.zeros(max_batch, np.int32)  # next write position
+        self.slot_req: list[Request | None] = [None] * max_batch
+        self.queue: list[Request] = []
+
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model_lib.decode_step(p, c, t, pos, cfg))
+
+    # -------------------------------------------------------- lifecycle ----
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill(slot, req)
+
+    def _prefill(self, slot: int, req: Request) -> None:
+        """One AnchorAttention prefill pass produces BOTH the first-token
+        logits and the populated KV/state cache; the cache is spliced into
+        the engine's batch slot (no redundant per-token replay)."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        n = prompt.shape[1]
+        logits, pcache = model_lib.prefill(
+            self.params, prompt, self.cfg,
+            attn_impl=self._prefill_impl(n),
+            anchor_cfg=self.anchor_cfg)
+        first_tok = int(jnp.argmax(logits[0]))
+        self.cache = self._insert_cache(self.cache, pcache, slot)
+        req.generated.append(first_tok)
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = n
+
+    @staticmethod
+    @jax.jit
+    def _insert_cache(pool, pre, slot):
+        """Splice a single-sequence prefill cache into batch slot ``slot``.
+
+        Every cache leaf has batch at axis 1 and prefix-aligned content
+        (KV/latent caches fill positions [0, n); mamba states are full) —
+        so: take a zeroed one-slot slice, paste ``pre`` at the origin, and
+        write it back at the slot index.
+        """
+
+        def one(pool_leaf, pre_leaf):
+            upd = jnp.zeros_like(
+                jax.lax.dynamic_slice_in_dim(pool_leaf, 0, 1, axis=1))
+            upd = jax.lax.dynamic_update_slice(
+                upd, pre_leaf.astype(upd.dtype), (0,) * pre_leaf.ndim)
+            return jax.lax.dynamic_update_slice_in_dim(
+                pool_leaf, upd, slot, axis=1)
+
+        return jax.tree.map(one, pool, pre)
+
+    def _prefill_impl(self, n: int) -> str:
+        cfg = self.anchor_cfg or AnchorConfig()
+        need = cfg.block_q * cfg.step
+        if self.attn_impl == "anchor" and n % need == 0 and n >= 2 * need:
+            return "anchor"
+        return "dense"  # short prompts: sparse prefill has no benefit
+
+    # ------------------------------------------------------------- step ----
+
+    def step(self) -> list[Request]:
+        """One engine iteration: admit, batch-decode, retire. Returns
+        newly finished requests."""
+        self._admit()
+        active = [s for s in range(self.max_batch) if self.slot_req[s] is not None]
+        finished: list[Request] = []
+        if not active:
+            return finished
+        # NOTE: slots share a single `pos` per step in this lite scheduler;
+        # decode each distinct position group together.
+        by_pos: dict[int, list[int]] = {}
+        for s in active:
+            by_pos.setdefault(int(self.slot_pos[s]), []).append(s)
+        for pos, slots in by_pos.items():
+            toks = np.zeros(self.max_batch, np.int32)
+            for s in slots:
+                toks[s] = self.slot_req[s].generated[-1]
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for s in slots:
+                req = self.slot_req[s]
+                req.generated.append(int(nxt[s]))
+                self.slot_pos[s] = pos + 1
+                hit_len = self.slot_pos[s] >= self.max_len - 1
+                if len(req.generated) >= req.max_new_tokens or hit_len:
+                    req.done = True
+                    finished.append(req)
+                    self.slot_req[s] = None
+                    self.slot_pos[s] = 0
+        return finished
+
+    def run_to_completion(self, max_iters: int = 10_000) -> list[Request]:
+        done: list[Request] = []
+        for _ in range(max_iters):
+            done.extend(self.step())
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+        return done

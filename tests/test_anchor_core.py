@@ -1,0 +1,142 @@
+"""AnchorAttention core semantics vs the dense oracle (paper Algs. 1-3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AnchorConfig, anchor_attention
+from repro.core.anchor_attention import (
+    anchor_phase,
+    identify_stripes,
+    selection_dense_mask,
+    sparse_phase,
+)
+from repro.core.baselines import anchor_attention_mask, full_attention, masked_attention
+from repro.core.masks import anchor_region_mask, candidate_region_mask, causal_mask
+from repro.core.metrics import mask_recall_sparsity
+from repro.kernels.ref import anchor_attention_ref, anchor_phase_ref, stripe_mask_ref
+
+
+def _qkv(key, b, hq, hkv, n, d, dtype=jnp.float32, scale=1.0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(key), 3)
+    q = jax.random.normal(k1, (b, hq, n, d), dtype) * scale
+    k = jax.random.normal(k2, (b, hkv, n, d), dtype) * scale
+    v = jax.random.normal(k3, (b, hkv, n, d), dtype)
+    return q, k, v
+
+
+CFG = AnchorConfig(block_q=32, block_kv=32, step=4, theta=3.0)
+
+
+class TestAnchorPhase:
+    def test_matches_dense_oracle(self):
+        q, k, v = _qkv(0, 1, 1, 1, 256, 32)
+        state = anchor_phase(q[0, 0], k[0, 0], v[0, 0], CFG)
+        m, l, acc = anchor_phase_ref(q[0, 0], k[0, 0], v[0, 0], CFG)
+        np.testing.assert_allclose(state.m, m, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(state.l, l, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(state.acc, acc, rtol=1e-4, atol=1e-4)
+
+    def test_anchor_region_is_causal_and_contains_init(self):
+        n = 256
+        region = np.asarray(anchor_region_mask(n, CFG))
+        causal = np.asarray(causal_mask(n))
+        assert not (region & ~causal).any()
+        # init block always visible (once causally reachable)
+        assert region[CFG.block_kv:, 0].all()
+        # diagonal always in-window
+        assert np.diag(region).all()
+
+    def test_candidate_disjoint_from_anchor_region(self):
+        n = 256
+        region = np.asarray(anchor_region_mask(n, CFG))
+        cand = np.asarray(candidate_region_mask(n, CFG))
+        assert not (region & cand).any()
+
+    def test_first_superblock_covers_full_causal_extent(self):
+        """Queries of the first superblock see their whole causal row in
+        phase 1 ⇒ exact there by construction."""
+        n = 256
+        region = np.asarray(anchor_region_mask(n, CFG))
+        causal = np.asarray(causal_mask(n))
+        sb0 = CFG.block_q * CFG.step
+        np.testing.assert_array_equal(region[:sb0], causal[:sb0])
+
+
+class TestIdentification:
+    def test_stripe_mask_matches_oracle(self):
+        q, k, v = _qkv(1, 1, 1, 1, 256, 32)
+        state = anchor_phase(q[0, 0], k[0, 0], v[0, 0], CFG)
+        sel = identify_stripes(q[0, 0], k[0, 0], state.m, CFG)
+        dense = selection_dense_mask(sel, 256, CFG)
+        ref = stripe_mask_ref(q[0, 0], k[0, 0], state.m, CFG)
+        per_row = jnp.repeat(ref, CFG.step * CFG.block_q, axis=0)[:256]
+        np.testing.assert_array_equal(np.asarray(dense), np.asarray(per_row))
+
+    def test_capacity_overflow_keeps_highest_priority(self):
+        q, k, v = _qkv(2, 1, 1, 1, 256, 32)
+        big = AnchorConfig(block_q=32, block_kv=32, step=4, theta=1e9)
+        cap = AnchorConfig(block_q=32, block_kv=32, step=4, theta=1e9, capacity=16)
+        state = anchor_phase(q[0, 0], k[0, 0], v[0, 0], big)
+        sel_full = identify_stripes(q[0, 0], k[0, 0], state.m, big)
+        sel_cap = identify_stripes(q[0, 0], k[0, 0], state.m, cap)
+        assert sel_cap.idx.shape[-1] == 16
+        # capped selection is a subset of the full one
+        full_mask = np.asarray(selection_dense_mask(sel_full, 256, big))
+        cap_mask = np.asarray(selection_dense_mask(sel_cap, 256, cap))
+        assert not (cap_mask & ~full_mask).any()
+
+
+class TestEndToEnd:
+    @pytest.mark.parametrize("theta", [0.5, 2.0, 5.0])
+    def test_matches_oracle(self, theta):
+        cfg = AnchorConfig(block_q=32, block_kv=32, step=4, theta=theta)
+        q, k, v = _qkv(3, 2, 2, 2, 256, 32)
+        out = anchor_attention(q, k, v, cfg)
+        ref = jax.vmap(jax.vmap(lambda a, b, c: anchor_attention_ref(a, b, c, cfg)))(
+            q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+    def test_theta_inf_equals_full_attention(self):
+        cfg = AnchorConfig(block_q=32, block_kv=32, step=4, theta=1e9)
+        q, k, v = _qkv(4, 1, 2, 2, 256, 32)
+        out = anchor_attention(q, k, v, cfg)
+        ref = jax.vmap(jax.vmap(full_attention))(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+    def test_gqa_grouping(self):
+        cfg = AnchorConfig(block_q=32, block_kv=32, step=2, theta=2.0)
+        q, k, v = _qkv(5, 1, 4, 2, 128, 16)
+        out = anchor_attention(q, k, v, cfg)
+        kr, vr = jnp.repeat(k, 2, 1), jnp.repeat(v, 2, 1)
+        ref = anchor_attention(q, kr, vr, cfg)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+    def test_without_anchor_ablation_differs(self):
+        """Table 4: the anchor matters — same θ selects different stripes."""
+        q, k, v = _qkv(6, 1, 1, 1, 256, 32, scale=2.0)
+        with_a = AnchorConfig(block_q=32, block_kv=32, step=4, theta=3.0)
+        without = AnchorConfig(
+            block_q=32, block_kv=32, step=4, theta=3.0, use_anchor=False)
+        ma = anchor_attention_mask(q[0, 0], k[0, 0], v[0, 0], with_a)
+        mb = anchor_attention_mask(q[0, 0], k[0, 0], v[0, 0], without)
+        assert (np.asarray(ma) != np.asarray(mb)).any()
+
+    def test_recall_sparsity_bounds(self):
+        q, k, v = _qkv(7, 1, 1, 1, 256, 32)
+        mask = anchor_attention_mask(q[0, 0], k[0, 0], v[0, 0], CFG)
+        r, s = mask_recall_sparsity(q[0, 0], k[0, 0], mask)
+        assert 0.0 <= float(r) <= 1.0
+        assert 0.0 <= float(s) < 1.0
+
+    def test_sparse_phase_resumes_union_softmax(self):
+        """(anchor ∪ stripes) mask softmax == phase-3 resumed online softmax."""
+        q, k, v = _qkv(8, 1, 1, 1, 256, 32)
+        qh, kh, vh = q[0, 0], k[0, 0], v[0, 0]
+        state = anchor_phase(qh, kh, vh, CFG)
+        sel = identify_stripes(qh, kh, state.m, CFG)
+        out = sparse_phase(qh, kh, vh, state, sel, CFG)
+        mask = anchor_attention_mask(qh, kh, vh, CFG)
+        ref = masked_attention(qh, kh, vh, mask)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)

@@ -1,0 +1,188 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AnchorConfig
+from repro.kernels import (
+    anchor_attention_pallas,
+    anchor_phase_pallas,
+    flash_attention,
+    pack_stripe_indices,
+    ssd_chunked,
+    stripe_select_pallas,
+)
+from repro.kernels.ref import (
+    anchor_attention_ref,
+    anchor_phase_ref,
+    flash_attention_ref,
+    ssd_ref,
+    stripe_mask_ref,
+)
+
+
+def _qkv(seed, b, hq, hkv, n, d, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (b, hq, n, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (b, hkv, n, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (b, hkv, n, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+def _tol(dtype):
+    return dict(atol=3e-2, rtol=3e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=1e-4)
+
+
+FLASH_CASES = [
+    # (b, hq, hkv, n, d, block_q, block_kv, dtype)
+    (1, 1, 1, 256, 64, 64, 64, jnp.float32),
+    (2, 4, 2, 256, 64, 64, 32, jnp.float32),
+    (1, 2, 1, 512, 128, 128, 128, jnp.float32),
+    (1, 2, 2, 256, 64, 64, 64, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,hq,hkv,n,d,bq,bkv,dtype", FLASH_CASES)
+def test_flash_attention(b, hq, hkv, n, d, bq, bkv, dtype):
+    q, k, v = _qkv(0, b, hq, hkv, n, d, dtype)
+    out = flash_attention(q, k, v, block_q=bq, block_kv=bkv)
+    kr, vr = jnp.repeat(k, hq // hkv, 1), jnp.repeat(v, hq // hkv, 1)
+    ref = jax.vmap(jax.vmap(flash_attention_ref))(q, kr, vr)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype))
+
+
+ANCHOR_CASES = [
+    # (b, hq, hkv, n, d, block, step, theta, dtype)
+    (1, 1, 1, 256, 32, 32, 4, 2.0, jnp.float32),
+    (2, 2, 1, 256, 64, 64, 2, 5.0, jnp.float32),
+    (1, 4, 2, 512, 32, 64, 4, 1.0, jnp.float32),
+    (1, 2, 2, 256, 64, 32, 2, 3.0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,hq,hkv,n,d,blk,step,theta,dtype", ANCHOR_CASES)
+def test_anchor_pipeline(b, hq, hkv, n, d, blk, step, theta, dtype):
+    cfg = AnchorConfig(block_q=blk, block_kv=blk, step=step, theta=theta)
+    q, k, v = _qkv(1, b, hq, hkv, n, d, dtype)
+    out = anchor_attention_pallas(q, k, v, cfg, block_c=blk)
+    kr, vr = jnp.repeat(k, hq // hkv, 1), jnp.repeat(v, hq // hkv, 1)
+    ref = jax.vmap(jax.vmap(lambda a, b_, c: anchor_attention_ref(a, b_, c, cfg)))(
+        q, kr, vr)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_anchor_phase_kernel():
+    cfg = AnchorConfig(block_q=32, block_kv=32, step=4, theta=2.0)
+    q, k, v = _qkv(2, 1, 2, 2, 256, 32, jnp.float32)
+    m, l, acc = anchor_phase_pallas(q, k, v, cfg)
+    for h in range(2):
+        mr, lr, ar = anchor_phase_ref(q[0, h], k[0, h], v[0, h], cfg)
+        np.testing.assert_allclose(np.asarray(m[0, h]), np.asarray(mr), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(l[0, h]), np.asarray(lr), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(acc[0, h]), np.asarray(ar), rtol=1e-4, atol=1e-4)
+
+
+def test_stripe_select_kernel():
+    cfg = AnchorConfig(block_q=32, block_kv=32, step=4, theta=2.0)
+    q, k, v = _qkv(3, 1, 1, 1, 256, 32, jnp.float32)
+    m, _, _ = anchor_phase_pallas(q, k, v, cfg)
+    t_m = 256 // 32
+    q_mean = jnp.mean(q.reshape(1, 1, t_m, 32, 32), axis=3)
+    m_bar = jnp.mean(m.reshape(1, 1, t_m, 32), axis=3)
+    hit = stripe_select_pallas(q_mean, m_bar, k, cfg)
+    ref = stripe_mask_ref(q[0, 0], k[0, 0], m[0, 0], cfg)
+    np.testing.assert_array_equal(
+        np.asarray(hit[0, 0]).astype(bool), np.asarray(ref))
+
+
+def test_pack_stripe_indices_exact_when_capacity_suffices():
+    rng = np.random.default_rng(0)
+    hit = jnp.asarray(rng.integers(0, 2, size=(3, 2, 4, 64)), jnp.int32)
+    idx, valid = pack_stripe_indices(hit, 64)
+    # Scatter back -> identical mask.
+    recon = np.zeros(hit.shape, np.int32)
+    idx_n, valid_n = np.asarray(idx), np.asarray(valid)
+    it = np.ndindex(hit.shape[:-1])
+    for pos in it:
+        recon[pos][idx_n[pos][valid_n[pos] == 1]] = 1
+    np.testing.assert_array_equal(recon, np.asarray(hit))
+    # Valid slots come position-ordered.
+    for pos in np.ndindex(hit.shape[:-1]):
+        sel = idx_n[pos][valid_n[pos] == 1]
+        assert (np.diff(sel) > 0).all()
+
+
+SSD_CASES = [
+    (2, 128, 16, 8, 64, jnp.float32),
+    (1, 256, 32, 16, 128, jnp.float32),
+    (3, 128, 16, 8, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("bh,l,p,s,chunk,dtype", SSD_CASES)
+def test_ssd_kernel(bh, l, p, s, chunk, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = jax.random.normal(keys[0], (bh, l, p), jnp.float32).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (bh, l))) * 0.1
+    a = -jnp.exp(jax.random.normal(keys[2], (bh,)) * 0.5)
+    b = jax.random.normal(keys[3], (bh, l, s), jnp.float32).astype(dtype)
+    c = jax.random.normal(keys[4], (bh, l, s), jnp.float32).astype(dtype)
+    y, h = ssd_chunked(x, dt, a, b, c, chunk=chunk)
+    yr, hr = jax.vmap(ssd_ref)(x, dt, a, b, c)
+    tol = dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=1e-3, rtol=1e-3)
+
+
+def test_ssd_kernel_matches_xla_path():
+    """kernels/ssd.py ≡ models/ssm.py chunked-XLA implementation."""
+    from repro.models.ssm import _ssd_chunked_xla
+
+    keys = jax.random.split(jax.random.PRNGKey(5), 5)
+    b, l, h, p, s = 2, 128, 4, 16, 8
+    x = jax.random.normal(keys[0], (b, l, h, p))
+    dtv = jax.nn.softplus(jax.random.normal(keys[1], (b, l, h))) * 0.1
+    a = -jnp.exp(jax.random.normal(keys[2], (h,)) * 0.5)
+    bm = jax.random.normal(keys[3], (b, l, s))
+    cm = jax.random.normal(keys[4], (b, l, s))
+    y_xla, h_xla = _ssd_chunked_xla(x, dtv, a, bm, cm, 32)
+
+    xk = jnp.moveaxis(x, 2, 1).reshape(b * h, l, p)
+    dtk = jnp.moveaxis(dtv, 2, 1).reshape(b * h, l)
+    ak = jnp.tile(a, b)
+    bk = jnp.repeat(bm, h, axis=0).reshape(b * h, l, s)
+    ck = jnp.repeat(cm, h, axis=0).reshape(b * h, l, s)
+    y_k, h_k = ssd_chunked(xk, dtk, ak, bk, ck, chunk=32)
+    y_k = jnp.moveaxis(y_k.reshape(b, h, l, p), 1, 2)
+    np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_k), atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(h_xla), np.asarray(h_k.reshape(b, h, s, p)), atol=1e-4, rtol=1e-3)
+
+
+DECODE_CASES = [
+    # (b, hq, hkv, s, d, block_s, fill, dtype)
+    (1, 1, 1, 128, 64, 32, 100, jnp.float32),
+    (2, 4, 2, 256, 64, 64, 256, jnp.float32),
+    (1, 2, 1, 256, 128, 128, 17, jnp.float32),
+    (2, 2, 2, 128, 64, 32, 80, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d,bs,fill,dtype", DECODE_CASES)
+def test_flash_decode_kernel(b, hq, hkv, s, d, bs, fill, dtype):
+    """kernels/decode.py vs models.layers.decode_attention oracle."""
+    from repro.kernels import flash_decode
+    from repro.models.layers import decode_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (b, hq, 1, d), jnp.float32).astype(dtype)
+    kc = jax.random.normal(ks[1], (b, hkv, s, d), jnp.float32).astype(dtype)
+    vc = jax.random.normal(ks[2], (b, hkv, s, d), jnp.float32).astype(dtype)
+    out = flash_decode(q, kc, vc, jnp.asarray(fill), block_s=bs)
+    ref = decode_attention(q, kc, vc, jnp.asarray(fill))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype))

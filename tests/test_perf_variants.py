@@ -1,0 +1,135 @@
+"""Correctness of the §Perf beyond-paper variants (EXPERIMENTS.md §4/§5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core import AnchorConfig, anchor_attention
+from repro.core.anchor_attention import pack_selection
+from repro.core.baselines import full_attention
+from repro.models import attention as attn_lib
+
+
+class TestAbsorbedMLA:
+    """A-cell: absorbed-matmul decode ≡ naive decode (exact math)."""
+
+    def test_matches_naive_decode(self):
+        cfg = get_reduced_config("deepseek_v2_236b")
+        p = attn_lib.mla_init(jax.random.PRNGKey(0), cfg)
+        cache_n = attn_lib.mla_init_cache(cfg, 2, 24)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 1, cfg.d_model))
+        for pos in range(8):
+            out_n, new_cache = attn_lib.mla_decode(x, p, cache_n, cfg, jnp.asarray(pos))
+            out_a, cache_a = attn_lib.mla_decode_absorbed(
+                x, p, cache_n, cfg, jnp.asarray(pos))
+            np.testing.assert_allclose(
+                np.asarray(out_n, np.float32), np.asarray(out_a, np.float32),
+                atol=2e-2, rtol=2e-2)
+            for a, b in zip(jax.tree.leaves(new_cache), jax.tree.leaves(cache_a)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            cache_n = new_cache
+
+    def test_full_stack_decode_with_absorb(self):
+        import dataclasses
+
+        from repro.models import model as model_lib
+
+        cfg = dataclasses.replace(
+            get_reduced_config("deepseek_v2_236b"), mla_absorb=True)
+        params = model_lib.init(jax.random.PRNGKey(0), cfg)
+        cache = model_lib.init_cache(cfg, 2, 8)
+        logits, _ = model_lib.decode_step(
+            params, cache, jnp.zeros((2,), jnp.int32), jnp.asarray(0), cfg)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+class TestSharedKVGroups:
+    """C4: unioned per-KV-group selection."""
+
+    def test_exact_at_theta_inf(self):
+        cfg = AnchorConfig(block_q=32, block_kv=32, step=2, theta=1e9,
+                           share_kv_groups=True)
+        q = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 256, 32))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 256, 32))
+        v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 256, 32))
+        out = anchor_attention(q, k, v, cfg)
+        kr, vr = jnp.repeat(k, 2, 1), jnp.repeat(v, 2, 1)
+        ref = jax.vmap(jax.vmap(full_attention))(q, kr, vr)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+    def test_selection_is_superset_of_per_head(self):
+        """Union selection covers every per-head selection ⇒ recall ≥."""
+        from repro.core.anchor_attention import (
+            anchor_phase, identification_scores, stripe_mask_from_scores)
+
+        cfg = AnchorConfig(block_q=32, block_kv=32, step=2, theta=2.0)
+        q = jax.random.normal(jax.random.PRNGKey(3), (4, 256, 32))
+        k = jax.random.normal(jax.random.PRNGKey(4), (256, 32))
+        v = jax.random.normal(jax.random.PRNGKey(5), (256, 32))
+        masks = []
+        for h in range(4):
+            m = anchor_phase(q[h], k, v, cfg).m
+            masks.append(np.asarray(stripe_mask_from_scores(
+                identification_scores(q[h], k, cfg), m, 256, cfg)))
+        union = np.logical_or.reduce(masks)
+        for m in masks:
+            assert not (m & ~union).any()
+
+
+class TestSortFreePacking:
+    """C3: cumsum-rank packing replaces lax.top_k."""
+
+    def test_exact_when_capacity_suffices(self):
+        rng = np.random.default_rng(0)
+        cfg = AnchorConfig(block_q=32, block_kv=32, step=2, capacity=None)
+        n = 256
+        t_s = cfg.num_superblocks(n)
+        sel = jnp.asarray(rng.integers(0, 2, (t_s, n)).astype(bool))
+        packed = pack_selection(sel, n, cfg)
+        # reconstruct the mask from (idx, valid)
+        recon = np.zeros((t_s, n), bool)
+        idx, valid = np.asarray(packed.idx), np.asarray(packed.valid)
+        for s in range(t_s):
+            recon[s, idx[s][valid[s]]] = True
+        np.testing.assert_array_equal(recon, np.asarray(sel))
+
+    def test_overflow_keeps_earliest_by_position(self):
+        cfg = AnchorConfig(block_q=32, block_kv=32, step=2, capacity=4)
+        n = 128
+        t_s = cfg.num_superblocks(n)
+        sel = jnp.zeros((t_s, n), bool).at[:, [3, 10, 20, 30, 40, 50]].set(True)
+        packed = pack_selection(sel, n, cfg)
+        idx, valid = np.asarray(packed.idx), np.asarray(packed.valid)
+        for s in range(t_s):
+            kept = sorted(idx[s][valid[s]])
+            assert kept == [3, 10, 20, 30]  # earliest 4 positions
+
+    def test_valid_counts_match(self):
+        cfg = AnchorConfig(block_q=16, block_kv=16, step=2, capacity=8)
+        rng = np.random.default_rng(1)
+        n = 64
+        t_s = cfg.num_superblocks(n)
+        sel = jnp.asarray(rng.integers(0, 2, (t_s, n)).astype(bool))
+        packed = pack_selection(sel, n, cfg)
+        want = np.minimum(np.asarray(sel.sum(1)), 8)
+        np.testing.assert_array_equal(np.asarray(packed.valid.sum(1)), want)
+
+
+@pytest.mark.parametrize("share", [False, True])
+def test_blockwise_sparse_phase_chunk_invariance(share):
+    """C2: output independent of the capacity chunk size."""
+    from repro.core.anchor_attention import (
+        anchor_phase, identify_stripes, sparse_phase)
+
+    cfg = AnchorConfig(block_q=32, block_kv=32, step=2, theta=3.0)
+    q = jax.random.normal(jax.random.PRNGKey(6), (256, 32))
+    k = jax.random.normal(jax.random.PRNGKey(7), (256, 32))
+    v = jax.random.normal(jax.random.PRNGKey(8), (256, 32))
+    st = anchor_phase(q, k, v, cfg)
+    sel = identify_stripes(q, k, st.m, cfg)
+    outs = [np.asarray(sparse_phase(q, k, v, st, sel, cfg, block_c=bc))
+            for bc in (32, 64, 256)]
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], atol=1e-5)

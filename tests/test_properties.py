@@ -1,0 +1,177 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import AnchorConfig
+from repro.core.anchor_attention import anchor_phase, identify_stripes
+from repro.core.baselines import anchor_attention_mask, full_attention
+from repro.core.metrics import mask_recall_sparsity
+from repro.core import anchor_attention
+from repro.optim.compression import dequantize, quantize
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _qkv(seed, n=128, d=16, scale=1.0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (n, d)) * scale
+    k = jax.random.normal(k2, (n, d)) * scale
+    v = jax.random.normal(k3, (n, d))
+    return q, k, v
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 50), t1=st.floats(0.2, 3.0), dt=st.floats(0.1, 4.0))
+def test_recall_and_sparsity_monotone_in_theta(seed, t1, dt):
+    """Larger θ ⇒ superset selection ⇒ recall ↑, sparsity ↓ (paper Table 4)."""
+    q, k, v = _qkv(seed, scale=1.5)
+    c1 = AnchorConfig(block_q=16, block_kv=16, step=2, theta=t1)
+    c2 = AnchorConfig(block_q=16, block_kv=16, step=2, theta=t1 + dt)
+    m1 = anchor_attention_mask(q, k, v, c1)
+    m2 = anchor_attention_mask(q, k, v, c2)
+    assert not (np.asarray(m1) & ~np.asarray(m2)).any(), "selection not nested"
+    r1, s1 = mask_recall_sparsity(q, k, m1)
+    r2, s2 = mask_recall_sparsity(q, k, m2)
+    assert float(r2) >= float(r1) - 1e-6
+    assert float(s2) <= float(s1) + 1e-6
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 50))
+def test_theta_inf_is_exact(seed):
+    q, k, v = _qkv(seed)
+    cfg = AnchorConfig(block_q=16, block_kv=16, step=2, theta=1e9)
+    out = anchor_attention(q[None, None], k[None, None], v[None, None], cfg)
+    ref = full_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out[0, 0]), np.asarray(ref), atol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 50), theta=st.floats(0.5, 6.0))
+def test_capacity_none_counts_all_candidates(seed, theta):
+    """StripeSelection.valid count == StripeSelection.count when capacity
+    covers every candidate (no silent drops)."""
+    q, k, v = _qkv(seed)
+    cfg = AnchorConfig(block_q=16, block_kv=16, step=2, theta=theta)
+    state = anchor_phase(q, k, v, cfg)
+    sel = identify_stripes(q, k, state.m, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(sel.valid.sum(-1)), np.asarray(sel.count))
+    # counts never exceed candidate-range sizes
+    assert (np.asarray(sel.count) <= np.asarray(sel.n_candidates)).all()
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 50))
+def test_anchor_is_rowwise_upper_bound_on_anchor_region(seed):
+    """m = max over anchor region ⇒ every anchor-region score ≤ m."""
+    from repro.core.masks import anchor_region_mask
+
+    q, k, v = _qkv(seed)
+    cfg = AnchorConfig(block_q=16, block_kv=16, step=2)
+    state = anchor_phase(q, k, v, cfg)
+    s = (q @ k.T) / np.sqrt(q.shape[-1])
+    region = np.asarray(anchor_region_mask(q.shape[0], cfg))
+    s = np.where(region, np.asarray(s), -np.inf)
+    np.testing.assert_allclose(
+        s.max(-1), np.asarray(state.m), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 100),
+    shape=st.sampled_from([(16,), (8, 8), (128,)]),
+    bits=st.sampled_from([4, 8]),
+)
+def test_quantize_error_bounded(seed, shape, bits):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(shape).astype(np.float32)) * 10
+    q, scale = quantize(x, bits)
+    err = np.abs(np.asarray(dequantize(q, scale)) - np.asarray(x))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 100))
+def test_error_feedback_is_lossless_over_time(seed):
+    """Repeatedly compressing the SAME gradient with error feedback
+    converges to transmitting it exactly (residual -> 0 in mean)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+    residual = jnp.zeros_like(g)
+    sent = jnp.zeros_like(g)
+    for _ in range(30):
+        x = g + residual
+        q, scale = quantize(x, 8)
+        sent = sent + dequantize(q, scale)
+        residual = x - dequantize(q, scale)
+    avg_sent = sent / 30
+    np.testing.assert_allclose(np.asarray(avg_sent), np.asarray(g), atol=2e-2)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 30), n_blocks=st.integers(2, 6))
+def test_online_softmax_merge_associativity(seed, n_blocks):
+    """Merging per-block (m, l, acc) stats in any order == dense softmax —
+    the invariant behind Alg. 1/3 state reuse."""
+    rng = np.random.default_rng(seed)
+    s = rng.standard_normal((4, n_blocks * 8)).astype(np.float32)
+    v = rng.standard_normal((n_blocks * 8, 5)).astype(np.float32)
+
+    m = np.full((4,), -np.inf, np.float32)
+    l = np.zeros((4,), np.float32)
+    acc = np.zeros((4, 5), np.float32)
+    order = rng.permutation(n_blocks)
+    for j in order:
+        sj = s[:, j * 8:(j + 1) * 8]
+        mj = sj.max(-1)
+        m_new = np.maximum(m, mj)
+        p = np.exp(sj - m_new[:, None])
+        alpha = np.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[:, None] + p @ v[j * 8:(j + 1) * 8]
+        m = m_new
+    out = acc / l[:, None]
+    ref = jax.nn.softmax(jnp.asarray(s), -1) @ v
+    np.testing.assert_allclose(out, np.asarray(ref), atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 50), depth_frac=st.floats(0.1, 0.9))
+def test_needle_pipeline_plants_retrievable_needle(seed, depth_frac):
+    from repro.data import DataConfig, NeedleRetrieval
+
+    cfg = DataConfig(vocab_size=64, seq_len=32, global_batch=4, seed=seed,
+                     kind="needle")
+    batch = NeedleRetrieval(cfg).batch(0)
+    toks = np.asarray(batch["tokens"])
+    labels = np.asarray(batch["labels"])
+    depths = np.asarray(batch["needle_depth"])
+    for i in range(toks.shape[0]):
+        key = toks[i, -1]
+        assert toks[i, depths[i]] == key  # needle key planted at depth
+        assert labels[i, -1] == toks[i, depths[i] + 1]  # value supervised
+        assert (labels[i, :-1] == -1).all()
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 50), fill=st.integers(1, 64))
+def test_flash_decode_ignores_stale_cache_tail(seed, fill):
+    """flash_decode output depends only on cache[:cache_len] — junk beyond
+    the fill level never leaks (ring-buffer safety)."""
+    from repro.kernels import flash_decode
+
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (1, 2, 1, 16))
+    kc = jax.random.normal(ks[1], (1, 2, 64, 16))
+    vc = jax.random.normal(ks[2], (1, 2, 64, 16))
+    out = flash_decode(q, kc, vc, jnp.asarray(fill), block_s=16)
+    junk = jax.random.normal(ks[3], (1, 2, 64, 16)) * 100
+    mask = (jnp.arange(64) < fill)[None, None, :, None]
+    kc2 = jnp.where(mask, kc, junk)
+    vc2 = jnp.where(mask, vc, junk)
+    out2 = flash_decode(q, kc2, vc2, jnp.asarray(fill), block_s=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-6)
