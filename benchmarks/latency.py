@@ -16,6 +16,8 @@ import numpy as np
 
 from repro.core import AnchorConfig, anchor_attention
 from repro.core.metrics import flops_anchor_attention, flops_dense_attention
+from repro.kernels import dispatch
+from repro.kernels import ops as kernel_ops
 from repro.models.layers import blockwise_attention
 
 from benchmarks.synthetic_attention import structured_qkv
@@ -25,7 +27,7 @@ STEP = 4
 
 
 def _time(fn, *args, iters=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))  # warmup/compile (handles pytrees)
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
@@ -65,3 +67,26 @@ def run(report):
     fl = flops_anchor_attention(131072, 128, 128, 128, 16, 0.11 * 131072)
     report("paper_fig2_128k_speedup", fl["speedup_vs_dense"],
            "claim=4.6x_vs_flashattention")
+
+    # --- dispatched kernel ops under the active backend (registry path).
+    # Interpret mode replays every grid step in Python, so keep the shape
+    # small there; the numbers compare backends, not absolute hardware.
+    backend = dispatch.default_backend()
+    n_k = 2048 if backend == "xla" else 512
+    q, k, v, _ = structured_qkv(1, n_k)
+    qb = jnp.asarray(q)[None, None]
+    kb = jnp.asarray(k)[None, None]
+    vb = jnp.asarray(v)[None, None]
+    t_flash = _time(
+        lambda a, b, c: kernel_ops.flash_attention(a, b, c, block_q=BLOCK,
+                                                   block_kv=BLOCK),
+        qb, kb, vb)
+    report(f"dispatch_{backend}_flash", t_flash, f"n={n_k}")
+    cfg = AnchorConfig(block_q=BLOCK, block_kv=BLOCK, step=STEP, theta=4.0,
+                       capacity=256)
+    t_anchor = _time(
+        lambda a, b, c: kernel_ops.anchor_attention(a, b, c, cfg,
+                                                    block_c=BLOCK),
+        qb, kb, vb)
+    report(f"dispatch_{backend}_anchor", t_anchor,
+           f"n={n_k}_speedup={t_flash / t_anchor:.2f}x")

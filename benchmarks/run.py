@@ -3,7 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV lines (us_per_call column holds the
 benchmark's primary scalar; `derived` explains it).
 
-    PYTHONPATH=src python -m benchmarks.run [--only recall_sparsity,...]
+    PYTHONPATH=src python -m benchmarks.run [--only recall_sparsity,...] \
+        [--backend xla|pallas_interpret|pallas_tpu]
+
+``--backend`` sets the process-default kernel backend (the registry in
+``repro.kernels.dispatch``), so the same harness measures the XLA paths,
+the Pallas kernels in interpret mode, or the compiled TPU kernels.
 """
 
 from __future__ import annotations
@@ -11,6 +16,8 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+
+from repro.kernels import dispatch
 
 SUITES = [
     "recall_sparsity",  # Fig. 6a + Table 1 + Fig. 5
@@ -25,8 +32,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of suites")
+    ap.add_argument("--backend", default=None, choices=dispatch.BACKENDS,
+                    help="kernel backend for dispatched ops "
+                         "(default: platform-appropriate)")
     args = ap.parse_args()
     suites = args.only.split(",") if args.only else SUITES
+    if args.backend:
+        dispatch.set_default_backend(args.backend)
+    print(f"# backend={dispatch.default_backend()}", file=sys.stderr)
 
     print("name,us_per_call,derived")
 

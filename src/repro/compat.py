@@ -1,0 +1,134 @@
+"""Version-drift compatibility shims for JAX.
+
+Every JAX symbol this repo uses that has moved or been renamed across JAX
+releases is resolved HERE, once, behind a stable name.  Call sites import
+from :mod:`repro.compat` and never touch ``jax.experimental`` spellings or
+version-specific class names directly.
+
+Covered drift (supported range: jax 0.4.30 – 0.7.x; see README):
+
+===================  ==============================  =========================
+stable name          old home (0.4.x)                new home (0.5+/0.7+)
+===================  ==============================  =========================
+``shard_map``        ``jax.experimental.shard_map``  ``jax.shard_map``
+(kwarg)              ``check_rep=``                  ``check_vma=``
+``tpu_compiler_params``  ``pltpu.TPUCompilerParams``  ``pltpu.CompilerParams``
+===================  ==============================  =========================
+
+The ``_resolve_*`` helpers take the module(s) to probe as arguments so unit
+tests can exercise both the old and the new symbol layout against fakes
+(see ``tests/test_dispatch.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import Any, Callable
+
+import jax
+
+
+# ------------------------------------------------------------- shard_map ----
+
+
+def _resolve_shard_map(jax_module: Any = None, experimental_module: Any = None):
+    """Locate the raw ``shard_map`` callable.
+
+    Newer JAX exports it as ``jax.shard_map``; 0.4.x only ships
+    ``jax.experimental.shard_map.shard_map``.
+    """
+    mod = jax_module if jax_module is not None else jax
+    fn = getattr(mod, "shard_map", None)
+    if fn is not None:
+        return fn
+    if experimental_module is None:
+        from jax.experimental import shard_map as experimental_module
+    fn = getattr(experimental_module, "shard_map", None)
+    if fn is None:
+        raise ImportError(
+            "could not resolve shard_map from jax or jax.experimental.shard_map"
+        )
+    return fn
+
+
+def _make_shard_map(raw: Callable) -> Callable:
+    """Wrap a raw shard_map so call sites can always pass ``check_vma=``.
+
+    JAX renamed ``check_rep`` (<= 0.4.x/0.5.x) to ``check_vma`` (0.7+); the
+    wrapper translates to whichever kwarg the installed version accepts and
+    drops the knob entirely if neither exists.
+    """
+    params = frozenset(inspect.signature(raw).parameters)
+
+    @functools.wraps(raw)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+        if check_vma is not None:
+            if "check_vma" in params:
+                kwargs["check_vma"] = check_vma
+            elif "check_rep" in params:
+                kwargs["check_rep"] = check_vma
+        return raw(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+    return shard_map
+
+
+shard_map = _make_shard_map(_resolve_shard_map())
+
+
+# ---------------------------------------------------------- AbstractMesh ----
+
+
+def _resolve_abstract_mesh(sharding_module: Any = None):
+    mod = sharding_module if sharding_module is not None else jax.sharding
+    return mod.AbstractMesh
+
+
+def abstract_mesh(axis_sizes, axis_names, sharding_module: Any = None):
+    """Build a ``jax.sharding.AbstractMesh`` across the constructor change.
+
+    0.4.x takes one ``((name, size), ...)`` tuple; newer JAX takes
+    ``(axis_sizes, axis_names)`` separately.  Call as
+    ``abstract_mesh((16, 16), ("data", "model"))``.
+    """
+    cls = _resolve_abstract_mesh(sharding_module)
+    params = list(inspect.signature(cls.__init__).parameters)
+    if len(params) > 1 and params[1] == "shape_tuple":
+        return cls(tuple(zip(axis_names, axis_sizes)))
+    return cls(tuple(axis_sizes), tuple(axis_names))
+
+
+# --------------------------------------------- Pallas TPU compiler params ----
+
+_TPU_PARAMS_CLS = None
+
+
+def _resolve_tpu_compiler_params(pltpu_module: Any = None):
+    """Locate the Pallas-TPU compiler-params class.
+
+    0.4.x names it ``TPUCompilerParams``; newer releases renamed it to
+    ``CompilerParams``.
+    """
+    mod = pltpu_module
+    if mod is None:
+        from jax.experimental.pallas import tpu as mod
+    cls = getattr(mod, "CompilerParams", None) or getattr(
+        mod, "TPUCompilerParams", None
+    )
+    if cls is None:
+        raise AttributeError(
+            "could not resolve CompilerParams/TPUCompilerParams from "
+            "jax.experimental.pallas.tpu"
+        )
+    return cls
+
+
+def tpu_compiler_params(**kwargs):
+    """Build Pallas TPU compiler params under whichever name this JAX has."""
+    global _TPU_PARAMS_CLS
+    if _TPU_PARAMS_CLS is None:
+        _TPU_PARAMS_CLS = _resolve_tpu_compiler_params()
+    return _TPU_PARAMS_CLS(**kwargs)
+
+
+__all__ = ["abstract_mesh", "shard_map", "tpu_compiler_params"]

@@ -33,7 +33,10 @@ class AnchorConfig:
         stripe selection per KV head — the union over its query group.
         Selection is a superset of every per-head selection (recall can
         only increase); K/V gather traffic drops by the group size.
-      interpret: run Pallas kernels in interpret mode (CPU validation).
+      backend: kernel backend for the Pallas execution paths — one of
+        ``"xla" | "pallas_interpret" | "pallas_tpu"`` (see
+        :mod:`repro.kernels.dispatch`).  ``None`` defers to the process
+        default (``$REPRO_BACKEND``, else platform-appropriate).
     """
 
     block_q: int = 128
@@ -43,7 +46,7 @@ class AnchorConfig:
     capacity: int | None = None
     use_anchor: bool = True
     share_kv_groups: bool = False
-    interpret: bool = True
+    backend: str | None = None
 
     def __post_init__(self) -> None:
         if self.block_q % self.block_kv != 0:

@@ -15,7 +15,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 _NEG_INF = -1e30
 

@@ -1,29 +1,40 @@
 """Pallas TPU kernels for AnchorAttention + SSD, with jnp oracles in ref.py.
 
 Kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
-validated on CPU via interpret mode.
+validated on CPU via interpret mode.  Every public op routes through the
+backend registry in :mod:`repro.kernels.dispatch` (``"xla"``,
+``"pallas_interpret"``, ``"pallas_tpu"``); see the README backend matrix.
 """
 
+from repro.kernels import dispatch, ref
 from repro.kernels.ops import (
+    anchor_attention,
     anchor_attention_pallas,
+    anchor_phase,
     anchor_phase_pallas,
     flash_attention,
     flash_decode,
     pack_stripe_indices,
+    sparse_attention,
     sparse_attention_pallas,
     ssd_chunked,
+    stripe_select,
     stripe_select_pallas,
 )
-from repro.kernels import ref
 
 __all__ = [
+    "anchor_attention",
     "anchor_attention_pallas",
+    "anchor_phase",
     "anchor_phase_pallas",
+    "dispatch",
     "flash_attention",
     "flash_decode",
     "pack_stripe_indices",
+    "ref",
+    "sparse_attention",
     "sparse_attention_pallas",
     "ssd_chunked",
+    "stripe_select",
     "stripe_select_pallas",
-    "ref",
 ]

@@ -21,7 +21,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
 from repro.core.config import AnchorConfig
+from repro.kernels import dispatch
 
 _NEG_INF = -1e30
 
@@ -80,9 +82,13 @@ def _anchor_kernel(
         acc_ref[0] = accs_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
 def anchor_phase_pallas(
-    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, cfg: AnchorConfig
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: AnchorConfig,
+    interpret: bool = True,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Alg. 1 for batched heads.  q: (B, Hq, N, D); k, v: (B, Hkv, N, D).
 
@@ -129,10 +135,16 @@ def anchor_phase_pallas(
             pltpu.VMEM((cfg.block_q, 1), jnp.float32),
             pltpu.VMEM((cfg.block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
-        interpret=cfg.interpret,
+        interpret=interpret,
     )(qf, kf, vf)
     shape = (batch, hq, n)
     return m.reshape(shape), l.reshape(shape), acc.reshape(batch, hq, n, d)
+
+
+dispatch.register("anchor_phase", "pallas_interpret")(
+    functools.partial(anchor_phase_pallas, interpret=True))
+dispatch.register("anchor_phase", "pallas_tpu")(
+    functools.partial(anchor_phase_pallas, interpret=False))

@@ -18,6 +18,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+from repro.kernels import dispatch
+
 _NEG_INF = -1e30
 
 
@@ -101,8 +104,14 @@ def flash_decode(
             pltpu.VMEM((1, 1), jnp.float32),
             pltpu.VMEM((1, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(len_arr, qf, kf, vf)
     return out.reshape(b, hq, 1, d)
+
+
+dispatch.register("flash_decode", "pallas_interpret")(
+    functools.partial(flash_decode, interpret=True))
+dispatch.register("flash_decode", "pallas_tpu")(
+    functools.partial(flash_decode, interpret=False))

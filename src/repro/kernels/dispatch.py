@@ -1,0 +1,102 @@
+"""Backend registry + dispatch for every kernel entry point.
+
+One op name, N backend implementations:
+
+=================  ===========================================================
+``xla``            pure-XLA implementations (blockwise online-softmax, the
+                   static-capacity anchor pipeline, chunked SSD) — run
+                   anywhere, GSPMD-partitionable.
+``pallas_interpret``  the Pallas kernels in interpreter mode — CPU validation
+                   of the exact kernel code paths.
+``pallas_tpu``     the Pallas kernels compiled for TPU — the production path.
+=================  ===========================================================
+
+Default backend resolution (first hit wins):
+
+1. an explicit ``backend=`` argument at the call site,
+2. :func:`set_default_backend` (process-wide override, used by the
+   benchmark runners' ``--backend`` flag),
+3. the ``REPRO_BACKEND`` environment variable,
+4. ``pallas_tpu`` when the JAX runtime platform is TPU, else
+   ``pallas_interpret``.
+
+Adding a GPU/Triton backend (or surviving the next JAX API move) is one
+``register()`` call per op — no sweep over kernel files.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable
+
+import jax
+
+BACKENDS = ("xla", "pallas_interpret", "pallas_tpu")
+
+_ENV_VAR = "REPRO_BACKEND"
+_default_override: str | None = None
+_REGISTRY: dict[tuple[str, str], Callable] = {}
+
+
+def _validate(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; available: {', '.join(BACKENDS)}"
+        )
+    return backend
+
+
+def set_default_backend(backend: str | None) -> None:
+    """Process-wide default override (``None`` clears it)."""
+    global _default_override
+    _default_override = _validate(backend) if backend is not None else None
+
+
+def default_backend() -> str:
+    """The backend used when a call site passes ``backend=None``."""
+    if _default_override is not None:
+        return _default_override
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        return _validate(env)
+    return "pallas_tpu" if jax.default_backend() == "tpu" else "pallas_interpret"
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    return _validate(backend) if backend is not None else default_backend()
+
+
+def register(op: str, backend: str):
+    """Decorator: register ``fn`` as the ``backend`` implementation of ``op``.
+
+    All implementations of one op must share a call signature (modulo
+    backend-internal knobs pinned via ``functools.partial``).
+    """
+    _validate(backend)
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[(op, backend)] = fn
+        return fn
+
+    return deco
+
+
+def lookup(op: str, backend: str | None = None) -> tuple[Callable, str]:
+    """Resolve ``(implementation, backend_name)`` for an op."""
+    b = resolve_backend(backend)
+    try:
+        return _REGISTRY[(op, b)], b
+    except KeyError:
+        have = sorted(bk for (o, bk) in _REGISTRY if o == op)
+        raise NotImplementedError(
+            f"op {op!r} has no {b!r} implementation"
+            + (f" (registered: {', '.join(have)})" if have else " (op unknown)")
+        ) from None
+
+
+def registered_ops() -> list[str]:
+    return sorted({op for (op, _) in _REGISTRY})
+
+
+def registered_backends(op: str) -> list[str]:
+    return sorted(bk for (o, bk) in _REGISTRY if o == op)

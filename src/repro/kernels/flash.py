@@ -18,6 +18,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+from repro.kernels import dispatch
+
 _NEG_INF = -1e30
 
 
@@ -105,9 +108,15 @@ def flash_attention(
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
     )(qf, kf, vf)
     return out.reshape(batch, hq, n, d)
+
+
+dispatch.register("flash_attention", "pallas_interpret")(
+    functools.partial(flash_attention, interpret=True))
+dispatch.register("flash_attention", "pallas_tpu")(
+    functools.partial(flash_attention, interpret=False))

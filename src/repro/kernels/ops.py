@@ -1,10 +1,20 @@
-"""Jitted wrappers composing the Pallas kernels into the full pipelines.
+"""Backend-dispatched public entry points for every kernel op.
 
-``anchor_attention_pallas`` chains Alg. 1 → Alg. 2 → (XLA index packing) →
-Alg. 3.  The packing step converts the kernel's stripe hit-mask into dense
-``(T_s, capacity)`` gather indices — the static-shape TPU stand-in for the
-paper's dynamic index lists (DESIGN.md §3).  Packing is position-ordered and
-drops nothing when ``capacity >= max selected``, which tests assert.
+Each function here resolves its implementation through
+:mod:`repro.kernels.dispatch` (``backend=`` argument → process default →
+``$REPRO_BACKEND`` → platform), so the same call site runs the pure-XLA
+path, the Pallas kernels in interpret mode, or the compiled TPU kernels.
+
+``anchor_attention`` on the pallas backends chains Alg. 1 → Alg. 2 → (XLA
+index packing) → Alg. 3.  The packing step converts the kernel's stripe
+hit-mask into dense ``(T_s, capacity)`` gather indices — the static-shape
+TPU stand-in for the paper's dynamic index lists (DESIGN.md §3).  Packing
+is position-ordered and drops nothing when ``capacity >= max selected``,
+which tests assert.
+
+The ``*_pallas`` names are kept as aliases of the dispatched entry points
+for backward compatibility (they resolve to the Pallas kernels under the
+default backend on both CPU and TPU).
 """
 
 from __future__ import annotations
@@ -15,23 +25,139 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import AnchorConfig
-from repro.kernels.anchor import anchor_phase_pallas
-from repro.kernels.decode import flash_decode
-from repro.kernels.flash import flash_attention
-from repro.kernels.sparse import sparse_attention_pallas
-from repro.kernels.ssd import ssd_chunked
-from repro.kernels.stripe_select import stripe_select_pallas
+from repro.kernels import dispatch
+
+# Importing the implementation modules populates the backend registry.
+from repro.kernels import anchor as _anchor  # noqa: F401
+from repro.kernels import decode as _decode  # noqa: F401
+from repro.kernels import flash as _flash  # noqa: F401
+from repro.kernels import sparse as _sparse  # noqa: F401
+from repro.kernels import ssd as _ssd  # noqa: F401
+from repro.kernels import stripe_select as _stripe_select  # noqa: F401
+from repro.kernels import xla as _xla  # noqa: F401
 
 __all__ = [
     "flash_attention",
     "flash_decode",
+    "anchor_phase",
+    "stripe_select",
+    "sparse_attention",
+    "ssd_chunked",
+    "anchor_attention",
+    "pack_stripe_indices",
+    # Backward-compatible aliases.
     "anchor_phase_pallas",
     "stripe_select_pallas",
     "sparse_attention_pallas",
-    "ssd_chunked",
     "anchor_attention_pallas",
-    "pack_stripe_indices",
 ]
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    block_q: int | None = None,
+    block_kv: int | None = None,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """Causal flash attention.  q: (B, Hq, N, D); k, v: (B, Hkv, N, D).
+
+    ``block_q``/``block_kv`` default to each backend's own tiling.
+    """
+    fn, _ = dispatch.lookup("flash_attention", backend)
+    kw = {}
+    if block_q is not None:
+        kw["block_q"] = block_q
+    if block_kv is not None:
+        kw["block_kv"] = block_kv
+    return fn(q, k, v, **kw)
+
+
+def flash_decode(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,
+    block_s: int | None = None,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """One-token decode attention.  q: (B, Hq, 1, D); caches: (B, Hkv, S, D)."""
+    fn, _ = dispatch.lookup("flash_decode", backend)
+    kw = {} if block_s is None else {"block_s": block_s}
+    return fn(q, k_cache, v_cache, cache_len, **kw)
+
+
+def anchor_phase(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: AnchorConfig,
+    backend: str | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Alg. 1 anchor statistics ``(m, l, acc)`` for batched heads."""
+    fn, _ = dispatch.lookup("anchor_phase", backend)
+    return fn(q, k, v, cfg)
+
+
+def stripe_select(
+    q_mean: jnp.ndarray,
+    m_bar: jnp.ndarray,
+    k: jnp.ndarray,
+    cfg: AnchorConfig,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """Alg. 2 stripe hit-mask (B, Hq, T_s, N) int32 from pooled inputs."""
+    fn, _ = dispatch.lookup("stripe_select", backend)
+    return fn(q_mean, m_bar, k, cfg)
+
+
+def sparse_attention(
+    q: jnp.ndarray,
+    k_sel: jnp.ndarray,
+    v_sel: jnp.ndarray,
+    valid: jnp.ndarray,
+    m0: jnp.ndarray,
+    l0: jnp.ndarray,
+    acc0: jnp.ndarray,
+    cfg: AnchorConfig,
+    block_c: int | None = None,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """Alg. 3 — resume the online softmax over gathered stripe tiles."""
+    fn, _ = dispatch.lookup("sparse_attention", backend)
+    kw = {} if block_c is None else {"block_c": block_c}
+    return fn(q, k_sel, v_sel, valid, m0, l0, acc0, cfg, **kw)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    chunk: int | None = None,
+    backend: str | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked Mamba2 SSD scan for batched heads."""
+    fn, _ = dispatch.lookup("ssd", backend)
+    kw = {} if chunk is None else {"chunk": chunk}
+    return fn(x, dt, a, b, c, **kw)
+
+
+def anchor_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: AnchorConfig,
+    block_c: int | None = None,
+    return_stats: bool = False,
+    backend: str | None = None,
+):
+    """Full AnchorAttention.  q: (B, Hq, N, D); k, v: (B, Hkv, N, D)."""
+    fn, _ = dispatch.lookup("anchor_attention", backend)
+    kw = {} if block_c is None else {"block_c": block_c}
+    return fn(q, k, v, cfg, return_stats=return_stats, **kw)
 
 
 def pack_stripe_indices(
@@ -50,26 +176,31 @@ def pack_stripe_indices(
     return idx.astype(jnp.int32), valid.astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "block_c", "return_stats"))
-def anchor_attention_pallas(
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "block_c", "return_stats", "backend")
+)
+def _anchor_attention_pipeline(
     q: jnp.ndarray,
     k: jnp.ndarray,
     v: jnp.ndarray,
     cfg: AnchorConfig,
     block_c: int = 128,
     return_stats: bool = False,
+    *,
+    backend: str,
 ):
-    """Full AnchorAttention via the Pallas kernels.
-
-    q: (B, Hq, N, D); k, v: (B, Hkv, N, D).  Returns (B, Hq, N, D).
-    """
+    """AnchorAttention via the Pallas kernels, all stages on ``backend``."""
     batch, hq, n, d = q.shape
     block_c = min(block_c, n)
     hkv = k.shape[1]
     t_m = cfg.num_q_blocks(n)
 
+    phase_fn, _ = dispatch.lookup("anchor_phase", backend)
+    select_fn, _ = dispatch.lookup("stripe_select", backend)
+    sparse_fn, _ = dispatch.lookup("sparse_attention", backend)
+
     # Alg. 1 — anchor statistics.
-    m, l, acc = anchor_phase_pallas(q, k, v, cfg)
+    m, l, acc = phase_fn(q, k, v, cfg)
 
     # Pooling (cheap XLA reductions feeding Alg. 2).
     q_mean = jnp.mean(
@@ -80,7 +211,7 @@ def anchor_attention_pallas(
         m_bar = jnp.zeros_like(m_bar)
 
     # Alg. 2 — stripe hit mask.
-    hit = stripe_select_pallas(q_mean, m_bar, k, cfg)  # (B, Hq, T_s, N)
+    hit = select_fn(q_mean, m_bar, k, cfg)  # (B, Hq, T_s, N)
 
     # XLA packing + gather-compaction (TPU adaptation of discrete loading).
     capacity = cfg.capacity if cfg.capacity is not None else n
@@ -98,8 +229,49 @@ def anchor_attention_pallas(
     v_sel = jnp.take_along_axis(v_full[:, :, None], idx[..., None], axis=3)
 
     # Alg. 3 — resume the online softmax over gathered stripes.
-    out = sparse_attention_pallas(q, k_sel, v_sel, valid, m, l, acc, cfg, block_c)
+    out = sparse_fn(q, k_sel, v_sel, valid, m, l, acc, cfg, block_c)
     if return_stats:
         counts = hit.sum(axis=-1)  # (B, Hq, T_s)
         return out, counts
     return out
+
+
+dispatch.register("anchor_attention", "pallas_interpret")(
+    functools.partial(_anchor_attention_pipeline, backend="pallas_interpret"))
+dispatch.register("anchor_attention", "pallas_tpu")(
+    functools.partial(_anchor_attention_pipeline, backend="pallas_tpu"))
+
+
+def _pallas_backend(backend: str | None) -> str:
+    """Resolve a backend for the ``*_pallas`` aliases — never ``xla``.
+
+    The historical names promise the Pallas kernel path runs; if the
+    process default is ``xla`` (e.g. ``$REPRO_BACKEND=xla``), fall through
+    to the platform-appropriate pallas backend instead of silently
+    executing the pure-XLA implementations under a pallas name.
+    """
+    b = dispatch.resolve_backend(backend)
+    if b == "xla":
+        b = "pallas_tpu" if jax.default_backend() == "tpu" else "pallas_interpret"
+    return b
+
+
+def anchor_phase_pallas(q, k, v, cfg, backend=None):
+    return anchor_phase(q, k, v, cfg, backend=_pallas_backend(backend))
+
+
+def stripe_select_pallas(q_mean, m_bar, k, cfg, backend=None):
+    return stripe_select(q_mean, m_bar, k, cfg, backend=_pallas_backend(backend))
+
+
+def sparse_attention_pallas(q, k_sel, v_sel, valid, m0, l0, acc0, cfg,
+                            block_c=None, backend=None):
+    return sparse_attention(q, k_sel, v_sel, valid, m0, l0, acc0, cfg,
+                            block_c=block_c, backend=_pallas_backend(backend))
+
+
+def anchor_attention_pallas(q, k, v, cfg, block_c=None, return_stats=False,
+                            backend=None):
+    return anchor_attention(q, k, v, cfg, block_c=block_c,
+                            return_stats=return_stats,
+                            backend=_pallas_backend(backend))

@@ -19,7 +19,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
 from repro.core.config import AnchorConfig
+from repro.kernels import dispatch
 
 _NEG_INF = -1e30
 
@@ -60,7 +62,7 @@ def _sparse_kernel(
         o_ref[0] = (accs_ref[...] / ls_ref[...]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "block_c"))
+@functools.partial(jax.jit, static_argnames=("cfg", "block_c", "interpret"))
 def sparse_attention_pallas(
     q: jnp.ndarray,
     k_sel: jnp.ndarray,
@@ -71,6 +73,7 @@ def sparse_attention_pallas(
     acc0: jnp.ndarray,
     cfg: AnchorConfig,
     block_c: int = 128,
+    interpret: bool = True,
 ) -> jnp.ndarray:
     """Alg. 3 for batched heads.
 
@@ -120,9 +123,15 @@ def sparse_attention_pallas(
             pltpu.VMEM((cfg.block_q, 1), jnp.float32),
             pltpu.VMEM((cfg.block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
-        interpret=cfg.interpret,
+        interpret=interpret,
     )(qf, ksf, vsf, vf, m0f, l0f, acc0f)
     return out.reshape(batch, h, n, d)
+
+
+dispatch.register("sparse_attention", "pallas_interpret")(
+    functools.partial(sparse_attention_pallas, interpret=True))
+dispatch.register("sparse_attention", "pallas_tpu")(
+    functools.partial(sparse_attention_pallas, interpret=False))

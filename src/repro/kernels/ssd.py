@@ -20,6 +20,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+from repro.kernels import dispatch
+
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref):
     t = pl.program_id(1)
@@ -115,9 +118,15 @@ def ssd_chunked(
             jax.ShapeDtypeStruct((bh, s, p), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((s, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,
     )(x, dt, a.reshape(bh, 1), b, c)
     return y, h
+
+
+dispatch.register("ssd", "pallas_interpret")(
+    functools.partial(ssd_chunked, interpret=True))
+dispatch.register("ssd", "pallas_tpu")(
+    functools.partial(ssd_chunked, interpret=False))

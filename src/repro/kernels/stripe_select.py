@@ -20,7 +20,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
 from repro.core.config import AnchorConfig
+from repro.kernels import dispatch
 
 
 def _select_kernel(qm_ref, mb_ref, k_ref, o_ref, *, cfg: AnchorConfig, scale, t_n):
@@ -45,9 +47,13 @@ def _select_kernel(qm_ref, mb_ref, k_ref, o_ref, *, cfg: AnchorConfig, scale, t_
         o_ref[...] = jnp.zeros_like(o_ref)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
 def stripe_select_pallas(
-    q_mean: jnp.ndarray, m_bar: jnp.ndarray, k: jnp.ndarray, cfg: AnchorConfig
+    q_mean: jnp.ndarray,
+    m_bar: jnp.ndarray,
+    k: jnp.ndarray,
+    cfg: AnchorConfig,
+    interpret: bool = True,
 ) -> jnp.ndarray:
     """Alg. 2 for batched heads.
 
@@ -93,9 +99,15 @@ def stripe_select_pallas(
         ],
         out_specs=pl.BlockSpec((1, 1, cfg.block_kv), lambda b, s, j: (b, s, j)),
         out_shape=jax.ShapeDtypeStruct((batch * hq, t_s, n), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel")
         ),
-        interpret=cfg.interpret,
+        interpret=interpret,
     )(qf, mf, kf)
     return out.reshape(batch, hq, t_s, n)
+
+
+dispatch.register("stripe_select", "pallas_interpret")(
+    functools.partial(stripe_select_pallas, interpret=True))
+dispatch.register("stripe_select", "pallas_tpu")(
+    functools.partial(stripe_select_pallas, interpret=False))

@@ -1,0 +1,218 @@
+"""Pure-XLA backend implementations of every dispatched kernel op.
+
+Batched, kernel-compatible signatures: each function here is registered as
+the ``"xla"`` backend of the op whose Pallas twin lives in this package, so
+``dispatch.lookup(op, "xla")`` and ``dispatch.lookup(op, "pallas_*")`` are
+drop-in replacements for one another.  Where the repo already ships a
+production XLA path (blockwise attention, the static-capacity anchor
+pipeline in :mod:`repro.core.anchor_attention`) these delegate to it; the
+remaining ops are implemented here with the same math as their kernels.
+
+Imports of :mod:`repro.models` / :mod:`repro.core.anchor_attention` are
+lazy (inside the functions) to keep the kernels package importable without
+dragging in the model zoo.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import AnchorConfig
+from repro.kernels import dispatch
+
+_NEG_INF = -1e30
+
+
+@dispatch.register("flash_attention", "xla")
+def flash_attention_xla(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    block_q: int = 128,
+    block_kv: int = 1024,
+) -> jnp.ndarray:
+    """Dense causal attention — blockwise online-softmax over KV blocks.
+
+    ``block_q`` only tiles the Pallas grid; the XLA scan has no query
+    blocking, so it is accepted and ignored.
+    """
+    del block_q
+    from repro.models.layers import blockwise_attention
+
+    return blockwise_attention(q, k, v, block_kv=min(block_kv, k.shape[2]))
+
+
+@dispatch.register("flash_decode", "xla")
+def flash_decode_xla(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,
+    block_s: int = 512,
+) -> jnp.ndarray:
+    """One-token decode attention over a KV cache (``block_s`` ignored)."""
+    del block_s
+    from repro.models.layers import decode_attention
+
+    return decode_attention(q, k_cache, v_cache, cache_len)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def anchor_phase_xla(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, cfg: AnchorConfig
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Alg. 1 anchor statistics, batched heads — vmapped core implementation."""
+    from repro.core.anchor_attention import anchor_phase
+
+    hq, hkv = q.shape[1], k.shape[1]
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    fn = jax.vmap(jax.vmap(anchor_phase, in_axes=(0, 0, 0, None)),
+                  in_axes=(0, 0, 0, None))
+    state = fn(q, k, v, cfg)
+    return state.m, state.l, state.acc
+
+
+dispatch.register("anchor_phase", "xla")(anchor_phase_xla)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def stripe_select_xla(
+    q_mean: jnp.ndarray, m_bar: jnp.ndarray, k: jnp.ndarray, cfg: AnchorConfig
+) -> jnp.ndarray:
+    """Alg. 2 stripe hit-mask from pooled inputs — same contract as the kernel.
+
+    q_mean: (B, Hq, T_m, D); m_bar: (B, Hq, T_m); k: (B, Hkv, N, D).
+    Returns (B, Hq, T_s, N) int32.
+    """
+    batch, hq, t_m, d = q_mean.shape
+    hkv, n = k.shape[1], k.shape[2]
+    t_s = cfg.num_superblocks(n)
+    scale = 1.0 / (d ** 0.5)
+    if hkv != hq:
+        k = jnp.repeat(k, hq // hkv, axis=1)
+
+    s = jnp.einsum(
+        "bhmd,bhnd->bhmn", q_mean.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    hit = (m_bar.astype(jnp.float32)[..., None] - s) <= cfg.theta
+
+    pad = t_s * cfg.step - t_m
+    if pad:
+        hit = jnp.pad(hit, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    hit = hit.reshape(batch, hq, t_s, cfg.step, n).any(axis=3)
+
+    # Candidate range per superblock: [block_kv, w_start(k) * block_kv).
+    kidx = jnp.arange(n)[None, :]
+    w_start_tok = (
+        jnp.maximum(1, jnp.arange(t_s) * cfg.step * cfg.r) * cfg.block_kv
+    )[:, None]
+    cand = (kidx >= cfg.block_kv) & (kidx < w_start_tok)
+    return (hit & cand[None, None]).astype(jnp.int32)
+
+
+dispatch.register("stripe_select", "xla")(stripe_select_xla)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_c"))
+def sparse_attention_xla(
+    q: jnp.ndarray,
+    k_sel: jnp.ndarray,
+    v_sel: jnp.ndarray,
+    valid: jnp.ndarray,
+    m0: jnp.ndarray,
+    l0: jnp.ndarray,
+    acc0: jnp.ndarray,
+    cfg: AnchorConfig,
+    block_c: int = 128,
+) -> jnp.ndarray:
+    """Alg. 3 resume over gathered stripe tiles (``block_c`` ignored)."""
+    del block_c
+    batch, h, n, d = q.shape
+    t_m = cfg.num_q_blocks(n)
+    scale = 1.0 / (d ** 0.5)
+
+    # Group query blocks onto their superblock's gathered tiles.
+    sidx = jnp.arange(t_m) // cfg.step
+    qb = q.reshape(batch, h, t_m, cfg.block_q, d).astype(jnp.float32)
+    ks = k_sel[:, :, sidx].astype(jnp.float32)  # (B, H, T_m, C, D)
+    vs = v_sel[:, :, sidx].astype(jnp.float32)
+    ok = valid[:, :, sidx] != 0  # (B, H, T_m, C)
+
+    s = jnp.einsum("bhiqd,bhicd->bhiqc", qb, ks) * scale
+    s = jnp.where(ok[:, :, :, None, :], s, _NEG_INF)
+
+    m0b = m0.reshape(batch, h, t_m, cfg.block_q)
+    l0b = l0.reshape(batch, h, t_m, cfg.block_q)
+    acc0b = acc0.reshape(batch, h, t_m, cfg.block_q, d)
+    m_new = jnp.maximum(m0b, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(ok[:, :, :, None, :], p, 0.0)
+    alpha = jnp.exp(m0b - m_new)
+    l_new = l0b * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc0b * alpha[..., None] + jnp.einsum("bhiqc,bhicd->bhiqd", p, vs)
+    out = acc_new / l_new[..., None]
+    return out.reshape(batch, h, n, d).astype(q.dtype)
+
+
+dispatch.register("sparse_attention", "xla")(sparse_attention_xla)
+
+
+@dispatch.register("anchor_attention", "xla")
+def anchor_attention_xla(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: AnchorConfig,
+    block_c: int = 128,
+    return_stats: bool = False,
+):
+    """Full AnchorAttention — the production static-capacity XLA pipeline.
+
+    ``block_c`` is the Pallas capacity tile; the XLA path picks its own
+    sparse-phase chunking, so it is accepted and ignored.
+    """
+    del block_c
+    from repro.core.anchor_attention import anchor_attention
+
+    return anchor_attention(q, k, v, cfg, return_stats=return_stats)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_chunked_xla(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    chunk: int = 128,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan, same contract as :func:`repro.kernels.ssd.ssd_chunked`.
+
+    x: (BH, L, P); dt: (BH, L); a: (BH,); b, c: (BH, L, S).
+    Returns (y: (BH, L, P), h_final: (BH, S, P) f32).
+
+    Delegates to the production XLA path in :mod:`repro.models.ssm`, which
+    shares ``a``/``b``/``c`` across a head axis — so vmap each (batch*head)
+    row through it as its own (B=1, H=1) problem.
+    """
+    from repro.models.ssm import _ssd_chunked_xla
+
+    assert x.shape[1] % chunk == 0, (x.shape[1], chunk)
+
+    def one(xh, dth, ah, bh, ch):
+        y, h = _ssd_chunked_xla(
+            xh[None, :, None, :], dth[None, :, None], ah[None],
+            bh[None], ch[None], chunk)
+        return y[0, :, 0], h[0, 0]
+
+    y, h = jax.vmap(one)(x, dt, a, b, c)
+    return y.astype(x.dtype), h
+
+
+dispatch.register("ssd", "xla")(ssd_chunked_xla)

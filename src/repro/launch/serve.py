@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.configs import get_config, get_reduced_config
 from repro.core.config import AnchorConfig
+from repro.kernels import dispatch
 from repro.models import model as model_lib
 from repro.serving import Request, ServingEngine
 
@@ -29,7 +30,11 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--theta", type=float, default=12.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default=None, choices=dispatch.BACKENDS,
+                    help="kernel backend (default: platform-appropriate)")
     args = ap.parse_args()
+    if args.backend:
+        dispatch.set_default_backend(args.backend)
 
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if cfg.embed_input:
@@ -37,10 +42,18 @@ def main() -> None:
                          "use a token arch for the serving demo")
     params = model_lib.init(jax.random.PRNGKey(args.seed), cfg)
     anchor_cfg = AnchorConfig(
-        block_q=16, block_kv=16, step=2, theta=args.theta, interpret=True)
+        block_q=16, block_kv=16, step=2, theta=args.theta,
+        backend=args.backend)
+    # An explicit pallas --backend routes long-prompt prefill through the
+    # dispatched kernel pipeline (attn_impl="pallas" honors
+    # anchor_cfg.backend).  "xla" (and the default) keep attn_impl=
+    # "anchor" — the same pipeline pinned to the XLA backend, which also
+    # carries the f32-input guard against bf16 MoE routing flips.
+    use_pallas = args.backend not in (None, "xla")
     engine = ServingEngine(
         params, cfg, max_batch=args.max_batch,
-        max_len=args.prompt_len + args.max_new + 8, anchor_cfg=anchor_cfg)
+        max_len=args.prompt_len + args.max_new + 8, anchor_cfg=anchor_cfg,
+        attn_impl="pallas" if use_pallas else "anchor")
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()

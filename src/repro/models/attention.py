@@ -1,9 +1,14 @@
 """Attention blocks: GQA (with AnchorAttention prefill backend) and MLA.
 
-``attn_impl`` selects the prefill path:
-  * "dense"  — blockwise online-softmax full attention (baseline).
-  * "anchor" — the paper's AnchorAttention (XLA static-capacity path).
-  * "pallas" — the Pallas kernel pipeline (interpret=True on CPU).
+``attn_impl`` selects the prefill path; every path routes through the
+kernel backend registry (:mod:`repro.kernels.dispatch`):
+  * "dense"  — dense flash attention, pinned to the ``xla`` backend
+    (blockwise online softmax; the baseline).
+  * "anchor" — AnchorAttention, pinned to the ``xla`` backend (the
+    static-capacity production path).
+  * "pallas" — AnchorAttention on ``anchor_cfg.backend`` (process default
+    when unset: Pallas kernels, interpret mode off-TPU).
+  * "pallas_flash" — dense flash attention on ``anchor_cfg.backend``.
 
 Decode always uses dense KV-cache attention (the paper is prefill-only,
 Limitations §).
@@ -16,12 +21,10 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.anchor_attention import anchor_attention
 from repro.core.config import AnchorConfig
 from repro.models.config import ModelConfig
 from repro.models.layers import (
     apply_rope,
-    blockwise_attention,
     decode_attention,
     dense_init,
     rmsnorm,
@@ -32,19 +35,37 @@ Params = dict[str, Any]
 
 
 def _prefill_attention(q, k, v, attn_impl: str, anchor_cfg: AnchorConfig | None):
-    if attn_impl == "anchor":
-        cfg = anchor_cfg or AnchorConfig()
-        return anchor_attention(q, k, v, cfg)
-    if attn_impl == "pallas":
-        from repro.kernels import anchor_attention_pallas
+    from repro.kernels import ops as kernel_ops
 
-        cfg = anchor_cfg or AnchorConfig()
-        return anchor_attention_pallas(q, k, v, cfg)
-    if attn_impl == "pallas_flash":
-        from repro.kernels import flash_attention
-
-        return flash_attention(q, k, v)
-    return blockwise_attention(q, k, v)
+    out_dtype = q.dtype
+    cfg = anchor_cfg or AnchorConfig()
+    if attn_impl in ("dense", "anchor"):
+        # Run the XLA baselines on f32 inputs and cast the output back
+        # once.  Both impls upcast to f32 internally anyway, but XLA
+        # lowers the mixed bf16→f32 dots of the two algorithms
+        # differently, which leaves the dense and anchor outputs 1 bf16
+        # ulp apart on a few elements — enough to flip MoE top-k routing
+        # downstream and blow a ~0.004 attention difference up to ~0.16
+        # in the logits (the granite_moe failure).  With f32 inputs both
+        # algorithms are numerically f32 end-to-end and their ≲1e-6
+        # ordering noise survives the output cast bit-identically.  The
+        # pallas paths below keep their native dtype: on TPU the bf16
+        # K/V tiles are half the VMEM traffic, which is the point.
+        q, k, v = (t.astype(jnp.float32) for t in (q, k, v))
+        if attn_impl == "dense":
+            out = kernel_ops.flash_attention(q, k, v, backend="xla")
+        else:
+            out = kernel_ops.anchor_attention(q, k, v, cfg, backend="xla")
+    elif attn_impl == "pallas":
+        out = kernel_ops.anchor_attention(q, k, v, cfg, backend=cfg.backend)
+    elif attn_impl == "pallas_flash":
+        out = kernel_ops.flash_attention(q, k, v, backend=cfg.backend)
+    else:
+        raise ValueError(
+            f"unknown attn_impl {attn_impl!r}; expected dense | anchor | "
+            "pallas | pallas_flash"
+        )
+    return out.astype(out_dtype)
 
 
 # ------------------------------------------------------------------ GQA ----

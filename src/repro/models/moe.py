@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, mlp_apply
 
@@ -180,7 +181,7 @@ def moe_apply(
             aux = jax.lax.pmean(aux, all_axes)  # replicated scalar
             return y.reshape(xl.shape).astype(xl.dtype), aux
 
-        out, aux = jax.shard_map(
+        out, aux = shard_map(
             body,
             mesh=mesh,
             in_specs=(P(ba, None, None), P(None, None),

@@ -108,8 +108,8 @@ class ServingEngine:
     def _prefill_impl(self, n: int) -> str:
         cfg = self.anchor_cfg or AnchorConfig()
         need = cfg.block_q * cfg.step
-        if self.attn_impl == "anchor" and n % need == 0 and n >= 2 * need:
-            return "anchor"
+        if self.attn_impl in ("anchor", "pallas") and n % need == 0 and n >= 2 * need:
+            return self.attn_impl
         return "dense"  # short prompts: sparse prefill has no benefit
 
     # ------------------------------------------------------------- step ----

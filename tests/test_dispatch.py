@@ -1,0 +1,290 @@
+"""Backend-dispatch layer + compat shim tests.
+
+Parity: the ``xla`` and ``pallas_interpret`` backends of every public op
+must agree with the dense oracles in ``kernels/ref.py`` (and with each
+other).  Compat: the symbol-resolution helpers must handle both the old
+(0.4.x) and new (0.5+/0.7+) JAX layouts, exercised here against fakes.
+"""
+
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import AnchorConfig
+from repro.kernels import dispatch
+from repro.kernels import ops as kernel_ops
+from repro.kernels.ref import (
+    anchor_attention_ref,
+    anchor_phase_ref,
+    flash_attention_ref,
+    ssd_ref,
+    stripe_mask_ref,
+)
+
+PARITY_BACKENDS = ("xla", "pallas_interpret")
+
+
+def _qkv(seed, b, hq, hkv, n, d):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (b, hq, n, d))
+    k = jax.random.normal(k2, (b, hkv, n, d))
+    v = jax.random.normal(k3, (b, hkv, n, d))
+    return q, k, v
+
+
+class TestBackendParity:
+    """Every public op: xla ≡ pallas_interpret ≡ ref oracle."""
+
+    @pytest.mark.parametrize("backend", PARITY_BACKENDS)
+    def test_flash_attention(self, backend):
+        q, k, v = _qkv(0, 2, 4, 2, 128, 32)
+        out = kernel_ops.flash_attention(
+            q, k, v, block_q=32, block_kv=32, backend=backend)
+        kr, vr = jnp.repeat(k, 2, 1), jnp.repeat(v, 2, 1)
+        ref = jax.vmap(jax.vmap(flash_attention_ref))(q, kr, vr)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-4)
+
+    @pytest.mark.parametrize("backend", PARITY_BACKENDS)
+    def test_anchor_phase(self, backend):
+        cfg = AnchorConfig(block_q=32, block_kv=32, step=2, theta=2.0)
+        q, k, v = _qkv(1, 1, 2, 1, 128, 32)
+        m, l, acc = kernel_ops.anchor_phase(q, k, v, cfg, backend=backend)
+        kr, vr = jnp.repeat(k, 2, 1), jnp.repeat(v, 2, 1)
+        for h in range(2):
+            mr, lr, ar = anchor_phase_ref(q[0, h], kr[0, h], vr[0, h], cfg)
+            np.testing.assert_allclose(np.asarray(m[0, h]), np.asarray(mr),
+                                       atol=1e-5)
+            np.testing.assert_allclose(np.asarray(l[0, h]), np.asarray(lr),
+                                       atol=1e-5, rtol=1e-5)
+            np.testing.assert_allclose(np.asarray(acc[0, h]), np.asarray(ar),
+                                       atol=1e-4, rtol=1e-4)
+
+    @pytest.mark.parametrize("backend", PARITY_BACKENDS)
+    def test_stripe_select(self, backend):
+        cfg = AnchorConfig(block_q=32, block_kv=32, step=2, theta=2.0)
+        q, k, v = _qkv(2, 1, 2, 1, 128, 32)
+        m, _, _ = kernel_ops.anchor_phase(q, k, v, cfg, backend=backend)
+        t_m = 128 // 32
+        q_mean = jnp.mean(q.reshape(1, 2, t_m, 32, 32), axis=3)
+        m_bar = jnp.mean(m.reshape(1, 2, t_m, 32), axis=3)
+        hit = kernel_ops.stripe_select(q_mean, m_bar, k, cfg, backend=backend)
+        kr = jnp.repeat(k, 2, 1)
+        for h in range(2):
+            ref = stripe_mask_ref(q[0, h], kr[0, h], m[0, h], cfg)
+            np.testing.assert_array_equal(
+                np.asarray(hit[0, h]).astype(bool), np.asarray(ref))
+
+    @pytest.mark.parametrize("backend", PARITY_BACKENDS)
+    def test_anchor_attention_end_to_end(self, backend):
+        """Exercises sparse_attention too (Alg. 3 resumes inside the
+        pipeline on the pallas path and in core on the xla path)."""
+        cfg = AnchorConfig(block_q=32, block_kv=32, step=2, theta=3.0)
+        q, k, v = _qkv(3, 1, 4, 2, 256, 32)
+        out = kernel_ops.anchor_attention(q, k, v, cfg, block_c=32,
+                                          backend=backend)
+        kr, vr = jnp.repeat(k, 2, 1), jnp.repeat(v, 2, 1)
+        ref = jax.vmap(jax.vmap(
+            lambda a, b_, c: anchor_attention_ref(a, b_, c, cfg)))(q, kr, vr)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-4)
+
+    def test_sparse_attention_cross_backend(self):
+        """Direct op parity on synthesized gathered tiles."""
+        cfg = AnchorConfig(block_q=32, block_kv=32, step=2, theta=1e9)
+        b, h, n, d, cap = 1, 2, 128, 16, 64
+        t_s = cfg.num_superblocks(n)
+        ks = jax.random.split(jax.random.PRNGKey(4), 7)
+        q = jax.random.normal(ks[0], (b, h, n, d))
+        k_sel = jax.random.normal(ks[1], (b, h, t_s, cap, d))
+        v_sel = jax.random.normal(ks[2], (b, h, t_s, cap, d))
+        valid = jax.random.bernoulli(ks[3], 0.7, (b, h, t_s, cap)).astype(
+            jnp.int32)
+        m0 = jax.random.normal(ks[4], (b, h, n))
+        l0 = jax.nn.softplus(jax.random.normal(ks[5], (b, h, n))) + 1.0
+        acc0 = jax.random.normal(ks[6], (b, h, n, d))
+        outs = [
+            np.asarray(kernel_ops.sparse_attention(
+                q, k_sel, v_sel, valid, m0, l0, acc0, cfg, block_c=32,
+                backend=be))
+            for be in PARITY_BACKENDS
+        ]
+        np.testing.assert_allclose(outs[0], outs[1], atol=2e-5, rtol=1e-4)
+
+    @pytest.mark.parametrize("backend", PARITY_BACKENDS)
+    def test_flash_decode(self, backend):
+        from repro.models.layers import decode_attention
+
+        ks = jax.random.split(jax.random.PRNGKey(5), 3)
+        q = jax.random.normal(ks[0], (2, 4, 1, 32))
+        kc = jax.random.normal(ks[1], (2, 2, 128, 32))
+        vc = jax.random.normal(ks[2], (2, 2, 128, 32))
+        out = kernel_ops.flash_decode(q, kc, vc, jnp.asarray(100),
+                                      block_s=32, backend=backend)
+        ref = decode_attention(q, kc, vc, jnp.asarray(100))
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-4)
+
+    @pytest.mark.parametrize("backend", PARITY_BACKENDS)
+    def test_ssd(self, backend):
+        keys = jax.random.split(jax.random.PRNGKey(6), 5)
+        bh, l, p, s = 2, 128, 16, 8
+        x = jax.random.normal(keys[0], (bh, l, p))
+        dt = jax.nn.softplus(jax.random.normal(keys[1], (bh, l))) * 0.1
+        a = -jnp.exp(jax.random.normal(keys[2], (bh,)) * 0.5)
+        b = jax.random.normal(keys[3], (bh, l, s))
+        c = jax.random.normal(keys[4], (bh, l, s))
+        y, h = kernel_ops.ssd_chunked(x, dt, a, b, c, chunk=32,
+                                      backend=backend)
+        yr, hr = jax.vmap(ssd_ref)(x, dt, a, b, c)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   atol=1e-4, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                                   atol=1e-3, rtol=1e-3)
+
+
+class TestDispatchRegistry:
+    def test_all_ops_have_all_backends(self):
+        ops = dispatch.registered_ops()
+        assert set(ops) >= {
+            "flash_attention", "flash_decode", "anchor_phase",
+            "stripe_select", "sparse_attention", "ssd", "anchor_attention",
+        }
+        for op in ops:
+            assert dispatch.registered_backends(op) == sorted(
+                dispatch.BACKENDS), op
+
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(ValueError, match="unknown backend"):
+            dispatch.resolve_backend("triton")
+        with pytest.raises(ValueError, match="unknown backend"):
+            dispatch.set_default_backend("cuda")
+
+    def test_unknown_op_reports_registered_backends(self):
+        with pytest.raises(NotImplementedError, match="op unknown"):
+            dispatch.lookup("no_such_op", "xla")
+
+    def test_default_backend_override_and_env(self, monkeypatch):
+        dispatch.set_default_backend("xla")
+        try:
+            assert dispatch.default_backend() == "xla"
+            assert dispatch.resolve_backend(None) == "xla"
+            assert dispatch.resolve_backend("pallas_interpret") == (
+                "pallas_interpret")
+        finally:
+            dispatch.set_default_backend(None)
+        monkeypatch.setenv("REPRO_BACKEND", "xla")
+        assert dispatch.default_backend() == "xla"
+        monkeypatch.delenv("REPRO_BACKEND")
+        assert dispatch.default_backend() in ("pallas_interpret", "pallas_tpu")
+
+
+class TestCompatShims:
+    """Symbol resolution against fakes of both the old and new JAX layouts."""
+
+    def test_shard_map_new_home(self):
+        sentinel = object()
+        fake_jax = types.SimpleNamespace(shard_map=sentinel)
+        assert compat._resolve_shard_map(fake_jax) is sentinel
+
+    def test_shard_map_experimental_fallback(self):
+        sentinel = object()
+        fake_jax = types.SimpleNamespace()  # no jax.shard_map (0.4.x)
+        fake_exp = types.SimpleNamespace(shard_map=sentinel)
+        assert compat._resolve_shard_map(fake_jax, fake_exp) is sentinel
+
+    def test_shard_map_neither_raises(self):
+        with pytest.raises(ImportError):
+            compat._resolve_shard_map(
+                types.SimpleNamespace(), types.SimpleNamespace())
+
+    def test_check_vma_translates_to_check_rep(self):
+        captured = {}
+
+        def old_shard_map(f, *, mesh, in_specs, out_specs, check_rep=True):
+            captured.update(check_rep=check_rep)
+            return f
+
+        wrapped = compat._make_shard_map(old_shard_map)
+        wrapped(lambda x: x, mesh=None, in_specs=(), out_specs=(),
+                check_vma=False)
+        assert captured == {"check_rep": False}
+
+    def test_check_vma_passes_through_on_new_jax(self):
+        captured = {}
+
+        def new_shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+            captured.update(check_vma=check_vma)
+            return f
+
+        wrapped = compat._make_shard_map(new_shard_map)
+        wrapped(lambda x: x, mesh=None, in_specs=(), out_specs=(),
+                check_vma=False)
+        assert captured == {"check_vma": False}
+
+    def test_check_vma_dropped_when_knob_gone(self):
+        def bare_shard_map(f, *, mesh, in_specs, out_specs):
+            return f
+
+        wrapped = compat._make_shard_map(bare_shard_map)
+        assert wrapped(lambda x: x, mesh=None, in_specs=(), out_specs=(),
+                       check_vma=False)(1) == 1
+
+    def test_tpu_compiler_params_old_name(self):
+        class FakeParams:
+            def __init__(self, **kw):
+                self.kw = kw
+
+        mod = types.SimpleNamespace(TPUCompilerParams=FakeParams)
+        cls = compat._resolve_tpu_compiler_params(mod)
+        assert cls is FakeParams
+
+    def test_tpu_compiler_params_new_name_wins(self):
+        old, new = type("Old", (), {}), type("New", (), {})
+        mod = types.SimpleNamespace(TPUCompilerParams=old, CompilerParams=new)
+        assert compat._resolve_tpu_compiler_params(mod) is new
+
+    def test_tpu_compiler_params_neither_raises(self):
+        with pytest.raises(AttributeError):
+            compat._resolve_tpu_compiler_params(types.SimpleNamespace())
+
+    def test_tpu_compiler_params_real_jax(self):
+        params = compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"))
+        assert params.dimension_semantics == ("parallel", "arbitrary")
+
+    def test_abstract_mesh_old_layout(self):
+        class OldMesh:
+            def __init__(self, shape_tuple):
+                self.shape_tuple = shape_tuple
+
+        mod = types.SimpleNamespace(AbstractMesh=OldMesh)
+        m = compat.abstract_mesh((4, 2), ("data", "model"), mod)
+        assert m.shape_tuple == (("data", 4), ("model", 2))
+
+    def test_abstract_mesh_new_layout(self):
+        class NewMesh:
+            def __init__(self, axis_sizes, axis_names):
+                self.axis_sizes, self.axis_names = axis_sizes, axis_names
+
+        mod = types.SimpleNamespace(AbstractMesh=NewMesh)
+        m = compat.abstract_mesh((4, 2), ("data", "model"), mod)
+        assert m.axis_sizes == (4, 2) and m.axis_names == ("data", "model")
+
+    def test_abstract_mesh_real_jax(self):
+        m = compat.abstract_mesh((8, 2), ("data", "model"))
+        assert tuple(m.axis_names) == ("data", "model")
+
+    def test_real_shard_map_runs(self):
+        """The wrapped shard_map executes on the real single-device mesh."""
+        from jax.sharding import PartitionSpec as P
+
+        mesh = jax.make_mesh((1,), ("data",))
+        out = compat.shard_map(
+            lambda x: x * 2, mesh=mesh, in_specs=(P(),), out_specs=P(),
+            check_vma=False)(jnp.arange(4.0))
+        np.testing.assert_allclose(np.asarray(out), [0.0, 2.0, 4.0, 6.0])

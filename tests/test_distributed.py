@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import abstract_mesh
 from repro.distributed import sharding as sh
 
 
@@ -35,14 +36,14 @@ def _run_subprocess(body: str) -> str:
 class TestShardingRules:
     def test_divisibility_fallback(self):
         """Odd vocab (50280) on a 16-way axis must replicate, not crash."""
-        mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+        mesh = abstract_mesh((16, 16), ("data", "model"))
         spec = sh.param_pspec(("embed",), (50280, 2560), mesh)
         assert spec[0] is None  # vocab replicated (50280 % 16 != 0)
         divisible = sh.param_pspec(("embed",), (50288, 2560), mesh)
         assert divisible[0] == "model"
 
     def test_attention_rules(self):
-        mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+        mesh = abstract_mesh((16, 16), ("data", "model"))
         P = jax.sharding.PartitionSpec
         # wq: shard output (heads) dim
         assert sh.param_pspec(("blocks", "l0", "attn", "wq"), (16, 2048, 2048), mesh)[-1] == "model"
@@ -98,6 +99,7 @@ class TestShardingRules:
     def test_compressed_psum_mean(self):
         out = _run_subprocess("""
             from jax.sharding import PartitionSpec as P
+            from repro.compat import shard_map
             from repro.optim.compression import compressed_psum
             mesh = jax.make_mesh((8,), ("data",))
             g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
@@ -106,7 +108,7 @@ class TestShardingRules:
                 out, new_r = compressed_psum(g[0], r[0], "data")
                 return out[None], new_r[None]
             with mesh:
-                fn = jax.jit(jax.shard_map(
+                fn = jax.jit(shard_map(
                     body, mesh=mesh,
                     in_specs=(P("data", None), P("data", None)),
                     out_specs=(P("data", None), P("data", None)),
