@@ -12,10 +12,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import AnchorConfig, anchor_attention
-from repro.core.metrics import flops_anchor_attention, flops_dense_attention
+from repro.core.metrics import flops_anchor_attention
 from repro.kernels import dispatch
 from repro.kernels import ops as kernel_ops
 from repro.models.layers import blockwise_attention

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced_config
-from repro.core.config import AnchorConfig
+from repro.core import AnchorConfig, AttentionSpec
 from repro.models import model as model_lib
 
 
@@ -34,9 +34,10 @@ def main() -> None:
     anchor_cfg = AnchorConfig(block_q=128, block_kv=128, step=4,
                               theta=args.theta, capacity=1024)
 
-    def run(impl):
-        fn = jax.jit(lambda p, t: model_lib.prefill(
-            p, t, cfg, attn_impl=impl, anchor_cfg=anchor_cfg))
+    def run(algorithm):
+        spec = AttentionSpec(algorithm=algorithm, backend="xla",
+                             anchor=anchor_cfg)
+        fn = jax.jit(lambda p, t: model_lib.prefill(p, t, cfg, spec=spec))
         logits, cache = fn(params, toks)  # compile+run
         jax.block_until_ready(logits)
         t0 = time.time()

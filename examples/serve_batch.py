@@ -1,6 +1,10 @@
 """End-to-end serving driver (the paper's setting): AnchorAttention prefill
 + batched continuous decoding on a reduced-config model.
 
+Prompt lengths are deliberately RAGGED (not block-aligned): the engine
+right-pads each admission wave to the next superblock boundary and runs
+one batched sparse prefill with `lengths` masking — zero dense fallbacks.
+
     PYTHONPATH=src python examples/serve_batch.py [--arch yi_9b] [--requests 6]
 """
 
@@ -14,7 +18,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_reduced_config
-from repro.core.config import AnchorConfig
+from repro.core import AnchorConfig, AttentionSpec
 from repro.models import model as model_lib
 from repro.serving import Request, ServingEngine
 
@@ -29,16 +33,21 @@ def main() -> None:
 
     cfg = get_reduced_config(args.arch)
     params = model_lib.init(jax.random.PRNGKey(0), cfg)
-    engine = ServingEngine(
-        params, cfg, max_batch=4, max_len=args.prompt_len + args.max_new + 8,
-        anchor_cfg=AnchorConfig(block_q=16, block_kv=16, step=2, theta=8.0))
+    anchor = AnchorConfig(block_q=16, block_kv=16, step=2, theta=8.0)
+    spec = AttentionSpec(algorithm="anchor", backend="xla", anchor=anchor)
+    # Cache must fit prompts padded for sparse prefill or the engine
+    # records a dense fallback.
+    max_len = anchor.prefill_pad_len(args.prompt_len) + args.max_new + 8
+    engine = ServingEngine(params, cfg, max_batch=4, max_len=max_len,
+                           spec=spec)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
     for uid in range(args.requests):
+        plen = max(4, args.prompt_len - int(rng.integers(0, 17)))  # ragged
         engine.submit(Request(
             uid=uid,
-            prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
+            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
             max_new_tokens=args.max_new))
     done = engine.run_to_completion()
     dt = time.time() - t0
@@ -46,6 +55,7 @@ def main() -> None:
         print(f"request {r.uid}: {len(r.generated)} tokens -> {r.generated}")
     tok = sum(len(r.generated) for r in done)
     print(f"\n{len(done)} requests, {tok} new tokens in {dt:.1f}s (CPU)")
+    print(f"engine stats: {engine.stats}")
 
 
 if __name__ == "__main__":

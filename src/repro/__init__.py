@@ -1,3 +1,29 @@
-"""repro — AnchorAttention (EMNLP 2025) as a multi-pod JAX/Pallas framework."""
+"""repro — AnchorAttention (EMNLP 2025) as a multi-pod JAX/Pallas framework.
 
-__version__ = "1.0.0"
+The canonical attention entry point is :func:`repro.attention`, configured
+by a declarative :class:`repro.AttentionSpec` (algorithm × backend ×
+masking); see the README "Attention API" section.
+"""
+
+__version__ = "1.1.0"
+
+
+def __getattr__(name):
+    # Lazy: importing `repro` stays cheap (no jax) until attention symbols
+    # are actually touched.
+    if name == "attention":
+        from repro.kernels.ops import attention
+
+        return attention
+    if name == "AttentionSpec":
+        from repro.core.spec import AttentionSpec
+
+        return AttentionSpec
+    if name == "AnchorConfig":
+        from repro.core.config import AnchorConfig
+
+        return AnchorConfig
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+__all__ = ["attention", "AttentionSpec", "AnchorConfig", "__version__"]

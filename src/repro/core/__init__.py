@@ -1,6 +1,11 @@
 """AnchorAttention core — the paper's contribution as composable JAX."""
 
 from repro.core.config import AnchorConfig, PAPER_CONFIG
+from repro.core.spec import (
+    AttentionSpec,
+    resolve_attention_spec,
+    spec_from_attn_impl,
+)
 from repro.core.anchor_attention import (
     AnchorState,
     StripeSelection,
@@ -13,7 +18,10 @@ from repro.core import baselines, masks, metrics
 
 __all__ = [
     "AnchorConfig",
+    "AttentionSpec",
     "PAPER_CONFIG",
+    "resolve_attention_spec",
+    "spec_from_attn_impl",
     "AnchorState",
     "StripeSelection",
     "anchor_attention",

@@ -72,12 +72,19 @@ def _window_block_ids(t_m: int, cfg: AnchorConfig) -> jnp.ndarray:
 
 
 def anchor_phase(
-    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, cfg: AnchorConfig
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: AnchorConfig,
+    length: jnp.ndarray | None = None,
 ) -> AnchorState:
     """Alg. 1 — anchor computation via blocked online softmax.
 
     Args:
       q, k, v: (N, D) single-head tensors.
+      length: optional () int32 — number of valid (non-padding) tokens of a
+        right-padded sequence.  Padding keys are masked out of the anchor
+        statistics; padded query rows emit ``m = -1e30, l = 0, acc = 0``.
 
     Returns:
       AnchorState with f32 statistics. ``m`` is the anchor (per-row max
@@ -98,7 +105,11 @@ def anchor_phase(
         jnp.arange(t_m)[:, None, None] * cfg.block_q
         + jnp.arange(cfg.block_q)[None, :, None]
     )
-    s0 = jnp.where(jnp.arange(cfg.block_kv)[None, None, :] <= row_pos, s0, _NEG_INF)
+    valid0 = jnp.arange(cfg.block_kv)[None, None, :] <= row_pos
+    if length is not None:
+        valid0 &= (jnp.arange(cfg.block_kv)[None, None, :] < length) & (
+            row_pos < length)
+    s0 = jnp.where(valid0, s0, _NEG_INF)
 
     # --- local window blocks (gathered; padded with a zero block + -inf).
     width = cfg.step * cfg.r + cfg.r
@@ -116,12 +127,18 @@ def anchor_phase(
     col_pos = blk_ids[:, :, None] * cfg.block_kv + jnp.arange(cfg.block_kv)[None, None, :]
     col_pos = col_pos[:, None, :, :]  # (T_m, 1, width, b_kv)
     valid = (blk_ids[:, None, :, None] < t_n) & (col_pos <= row_pos[..., None])
+    if length is not None:
+        valid &= (col_pos < length) & (row_pos[..., None] < length)
     sw = jnp.where(valid, sw, _NEG_INF)
     sw = sw.reshape(t_m, cfg.block_q, width * cfg.block_kv)
 
     s = jnp.concatenate([s0, sw], axis=-1)  # (T_m, b_q, b_kv*(width+1))
     m = jnp.max(s, axis=-1)
     p = jnp.exp(s - m[..., None])
+    # Fully-masked rows (varlen padding) have m == -1e30; without the guard
+    # exp(s - m) would be exp(0) = 1 there.  No-op for causal rows (the
+    # diagonal is always valid, so m is a real score).
+    p = jnp.where(s <= _NEG_INF, 0.0, p)
     l = jnp.sum(p, axis=-1)
     vv = jnp.concatenate(
         [jnp.broadcast_to(v0[None], (t_m, cfg.block_kv, dv)),
@@ -134,31 +151,68 @@ def anchor_phase(
     )
 
 
-def identification_scores(
-    q: jnp.ndarray, k: jnp.ndarray, cfg: AnchorConfig
+def masked_block_mean(
+    x: jnp.ndarray,
+    block: int,
+    length: jnp.ndarray | None,
+    fill: float = 0.0,
 ) -> jnp.ndarray:
-    """Pooled-query scores ``avgpool(Q) K^T / sqrt(d)`` — (T_m, N), f32."""
+    """Mean-pool ``x`` over ``block``-sized row groups, skipping padding.
+
+    x: (N, ...) with N % block == 0; ``length``: () valid-row count or
+    None (plain mean).  Blocks with zero valid rows pool to ``fill``.
+    """
+    n = x.shape[0]
+    t = n // block
+    xb = x.reshape(t, block, *x.shape[1:]).astype(jnp.float32)
+    if length is None:
+        return jnp.mean(xb, axis=1)
+    rv = (jnp.arange(n) < length).reshape(t, block)
+    cnt = rv.sum(axis=1)
+    rvx = rv.reshape(t, block, *([1] * (x.ndim - 1)))
+    total = jnp.sum(jnp.where(rvx, xb, 0.0), axis=1)
+    mean = total / jnp.maximum(cnt, 1).reshape(t, *([1] * (x.ndim - 1)))
+    empty = (cnt == 0).reshape(t, *([1] * (x.ndim - 1)))
+    return jnp.where(empty, fill, mean)
+
+
+def identification_scores(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    cfg: AnchorConfig,
+    length: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Pooled-query scores ``avgpool(Q) K^T / sqrt(d)`` — (T_m, N), f32.
+
+    With ``length``, padded query rows are excluded from the pooling.
+    """
     n, d = q.shape
-    t_m = cfg.num_q_blocks(n)
-    q_mean = jnp.mean(
-        q.reshape(t_m, cfg.block_q, d).astype(jnp.float32), axis=1
-    )
+    q_mean = masked_block_mean(q, cfg.block_q, length)
     scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
     return (q_mean @ k.T.astype(jnp.float32)) * scale
 
 
 def stripe_mask_from_scores(
-    scores: jnp.ndarray, m: jnp.ndarray, n: int, cfg: AnchorConfig
+    scores: jnp.ndarray,
+    m: jnp.ndarray,
+    n: int,
+    cfg: AnchorConfig,
+    length: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Alg. 2 thresholding — (T_s, N) bool superblock-level stripe mask.
 
-    ``scores``: (T_m, N) pooled scores; ``m``: (N,) anchor per row.
+    ``scores``: (T_m, N) pooled scores; ``m``: (N,) anchor per row.  With
+    ``length``, padded rows are excluded from the anchor pooling (blocks
+    of pure padding pool to +inf, which can never pass the threshold) and
+    padding keys are excluded from the candidate range.
     """
-    t_m = cfg.num_q_blocks(n)
     t_s = cfg.num_superblocks(n)
-    m_bar = jnp.mean(m.reshape(t_m, cfg.block_q), axis=1)  # avgpool(M, b_q)
+    # avgpool(M, b_q) over valid rows; all-padding blocks -> +inf (no hits).
+    m_bar = masked_block_mean(m, cfg.block_q, length, fill=jnp.inf)
     if not cfg.use_anchor:
-        m_bar = jnp.zeros_like(m_bar)  # Table 4 "Without Anchor" ablation
+        # Table 4 "Without Anchor" ablation: zero the anchor but keep the
+        # +inf sentinel of all-padding blocks.
+        m_bar = jnp.where(jnp.isinf(m_bar), m_bar, jnp.zeros_like(m_bar))
     diff = m_bar[:, None] - scores  # (T_m, N)
     hit = diff <= cfg.theta
     hit = hit.reshape(t_s, cfg.step, n).any(axis=1)  # union over the step rows
@@ -168,11 +222,17 @@ def stripe_mask_from_scores(
         jnp.maximum(1, jnp.arange(t_s) * cfg.step * cfg.r) * cfg.block_kv
     )[:, None]
     cand = (kidx >= cfg.block_kv) & (kidx < w_start_tok)
+    if length is not None:
+        cand &= kidx < length  # padding keys are never stripe-selected
     return hit & cand
 
 
 def identify_stripes(
-    q: jnp.ndarray, k: jnp.ndarray, m: jnp.ndarray, cfg: AnchorConfig
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    m: jnp.ndarray,
+    cfg: AnchorConfig,
+    length: jnp.ndarray | None = None,
 ) -> StripeSelection:
     """Alg. 2 — difference-aware stripe identification (static shapes).
 
@@ -185,8 +245,8 @@ def identify_stripes(
     (property-tested).
     """
     n, _ = q.shape
-    scores = identification_scores(q, k, cfg)
-    sel = stripe_mask_from_scores(scores, m, n, cfg)  # (T_s, N)
+    scores = identification_scores(q, k, cfg, length)
+    sel = stripe_mask_from_scores(scores, m, n, cfg, length)  # (T_s, N)
     return pack_selection(sel, n, cfg)
 
 
@@ -280,39 +340,54 @@ def sparse_phase(
     valc = jnp.moveaxis(valid.reshape(t_s, n_chunks, block_c), 1, 0)
     (m_new, l_new, acc_new), _ = jax.lax.scan(
         step, (m0, l0, acc0), (kc, vc, valc))
-    out = acc_new / l_new[..., None]
+    # l_new >= 1 for causal rows (the anchor region contains the diagonal);
+    # the guard only protects varlen padding rows with empty statistics.
+    out = acc_new / jnp.maximum(l_new, 1e-30)[..., None]
     return out.reshape(n, dv)
 
 
 def _anchor_attention_head(
-    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, cfg: AnchorConfig
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: AnchorConfig,
+    length: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    state = anchor_phase(q, k, v, cfg)
-    selection = identify_stripes(q, k, state.m, cfg)
+    state = anchor_phase(q, k, v, cfg, length)
+    selection = identify_stripes(q, k, state.m, cfg, length)
     out = sparse_phase(q, k, v, state, selection, cfg)
+    if length is not None:
+        # Padded query rows produce exact zeros.
+        out = jnp.where(jnp.arange(q.shape[0])[:, None] < length, out, 0.0)
     return out, selection.count
 
 
 def _anchor_attention_group(
-    qg: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, cfg: AnchorConfig
+    qg: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: AnchorConfig,
+    length: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """share_kv_groups: one unioned selection + one gather per KV head.
 
     qg: (rep, N, D) — the query heads of one KV group.
     """
     n = qg.shape[1]
-    states = jax.vmap(anchor_phase, in_axes=(0, None, None, None))(
-        qg, k, v, cfg)
+    states = jax.vmap(anchor_phase, in_axes=(0, None, None, None, None))(
+        qg, k, v, cfg, length)
 
     def head_mask(qh, mh):
-        scores = identification_scores(qh, k, cfg)
-        return stripe_mask_from_scores(scores, mh, n, cfg)
+        scores = identification_scores(qh, k, cfg, length)
+        return stripe_mask_from_scores(scores, mh, n, cfg, length)
 
     masks = jax.vmap(head_mask)(qg, states.m)  # (rep, T_s, N)
     selection = pack_selection(masks.any(axis=0), n, cfg)
     outs = jax.vmap(
         lambda qh, st: sparse_phase(qh, k, v, st, selection, cfg)
     )(qg, states)
+    if length is not None:
+        outs = jnp.where(jnp.arange(n)[None, :, None] < length, outs, 0.0)
     return outs, selection.count
 
 
@@ -323,6 +398,7 @@ def anchor_attention(
     v: jnp.ndarray,
     cfg: AnchorConfig = AnchorConfig(),
     return_stats: bool = False,
+    lengths: jnp.ndarray | None = None,
 ):
     """AnchorAttention over batched multi-head inputs (causal prefill).
 
@@ -331,6 +407,9 @@ def anchor_attention(
       cfg: AnchorConfig (hashable static arg).
       return_stats: additionally return per-superblock selected-stripe
         counts (B, Hq, T_s) for sparsity accounting.
+      lengths: optional (B,) int32 valid-token counts for right-padded
+        batches — padding keys never enter statistics or selection, and
+        padded query rows return zeros (see :mod:`repro.core.spec`).
 
     Returns:
       (B, Hq, N, D) output in ``q.dtype`` (f32 accumulation inside), and
@@ -344,9 +423,9 @@ def anchor_attention(
         rep = hq // hkv
         qg = q.reshape(b, hkv, rep, n, d)
         fn = jax.vmap(jax.vmap(_anchor_attention_group,
-                               in_axes=(0, 0, 0, None)),
-                      in_axes=(0, 0, 0, None))
-        out, counts = fn(qg, k, v, cfg)
+                               in_axes=(0, 0, 0, None, None)),
+                      in_axes=(0, 0, 0, None, 0 if lengths is not None else None))
+        out, counts = fn(qg, k, v, cfg, lengths)
         out = out.reshape(b, hq, n, -1).astype(q.dtype)
         if return_stats:
             return out, counts
@@ -355,9 +434,9 @@ def anchor_attention(
         rep = hq // hkv
         k = jnp.repeat(k, rep, axis=1)
         v = jnp.repeat(v, rep, axis=1)
-    fn = jax.vmap(jax.vmap(_anchor_attention_head, in_axes=(0, 0, 0, None)),
-                  in_axes=(0, 0, 0, None))
-    out, counts = fn(q, k, v, cfg)
+    fn = jax.vmap(jax.vmap(_anchor_attention_head, in_axes=(0, 0, 0, None, None)),
+                  in_axes=(0, 0, 0, None, 0 if lengths is not None else None))
+    out, counts = fn(q, k, v, cfg, lengths)
     out = out.astype(q.dtype)
     if return_stats:
         return out, counts

@@ -8,8 +8,6 @@ baseline) lives in :mod:`repro.kernels.flash`.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

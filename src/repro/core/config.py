@@ -9,6 +9,7 @@ and ``r = b_q // b_kv``.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +57,16 @@ class AnchorConfig:
             )
         if self.step < 1:
             raise ValueError("step must be >= 1")
+        if self.capacity is not None and self.capacity <= 0:
+            raise ValueError(
+                f"capacity must be None or a positive int, got "
+                f"{self.capacity!r}"
+            )
+        if not math.isfinite(self.theta):
+            raise ValueError(
+                f"theta must be finite, got {self.theta!r} "
+                "(use a large finite value like 1e9 for exact selection)"
+            )
 
     @property
     def r(self) -> int:
@@ -65,6 +76,18 @@ class AnchorConfig:
     def superblock_q(self) -> int:
         """Tokens covered by one identification superblock."""
         return self.block_q * self.step
+
+    def prefill_pad_len(self, n: int) -> int:
+        """Smallest right-padded length at which an ``n``-token prompt can
+        run sparse (anchor) prefill: a multiple of :meth:`superblock_q`,
+        and at least two superblocks (below that the anchor region already
+        covers everything, so sparse prefill has no benefit).
+
+        Serving callers size their KV cache with this so padded batched
+        prefill never falls back to dense (see ``ServingEngine.stats``).
+        """
+        need = self.superblock_q()
+        return max(2 * need, -(-n // need) * need)
 
     def w_start_block(self, k: int) -> int:
         """First local-window KV block for superblock ``k`` (0-based).

@@ -1,0 +1,168 @@
+"""Declarative attention specification — the one surface every layer grows on.
+
+``AttentionSpec`` replaces the historical ``attn_impl: str`` /
+``anchor_cfg: AnchorConfig | None`` pair that was threaded separately
+through models, launch, and serving.  A spec answers three questions:
+
+* **algorithm** — which attention math runs during prefill:
+  ``"dense"`` (blockwise/flash causal attention, the baseline) or
+  ``"anchor"`` (the paper's AnchorAttention pipeline, Algs. 1-3).
+* **backend**  — which kernel-registry backend executes it
+  (``"xla" | "pallas_interpret" | "pallas_tpu"``; ``None`` defers to the
+  process default, see :mod:`repro.kernels.dispatch`).
+* **masking**  — the sequence-validity discipline:
+  ``"causal"`` for full-length causal sequences, ``"padded"`` for
+  right-padded batches with per-sequence ``lengths``.
+
+``lengths`` semantics (``masking="padded"``): a ``(B,)`` int32 array of
+per-sequence *valid token counts*.  Sequence ``b`` occupies positions
+``[0, lengths[b])`` of a common padded length ``N``; positions
+``[lengths[b], N)`` are padding.  Padding keys are masked out of all
+attention scores and anchor statistics and are never stripe-selected;
+padded query rows produce exact zeros in the attention output.
+
+The old ``attn_impl`` strings keep working through
+:func:`spec_from_attn_impl` (a ``DeprecationWarning`` shim):
+
+=================  ==========================================================
+``"dense"``        ``AttentionSpec(algorithm="dense", backend="xla")``
+``"anchor"``       ``AttentionSpec(algorithm="anchor", backend="xla")``
+``"pallas"``       ``AttentionSpec(algorithm="anchor", backend=anchor.backend)``
+``"pallas_flash"`` ``AttentionSpec(algorithm="dense", backend=anchor.backend)``
+=================  ==========================================================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+from repro.core.config import AnchorConfig
+
+ALGORITHMS = ("dense", "anchor")
+MASKINGS = ("causal", "padded")
+
+# Old attn_impl string -> (algorithm, pinned backend or None = anchor.backend).
+_ATTN_IMPL_MAP = {
+    "dense": ("dense", "xla"),
+    "anchor": ("anchor", "xla"),
+    "pallas": ("anchor", None),
+    "pallas_flash": ("dense", None),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    """Hashable (jit-static) declarative attention configuration.
+
+    Attributes:
+      algorithm: ``"dense"`` | ``"anchor"`` — the prefill attention math.
+      backend: kernel backend name or ``None`` (process default).
+      anchor: :class:`AnchorConfig` hyper-parameters (used by the
+        ``"anchor"`` algorithm; ignored by ``"dense"``).
+      masking: ``"causal"`` | ``"padded"`` — whether calls carry a
+        per-sequence ``lengths`` array (see module docstring).
+    """
+
+    algorithm: str = "dense"
+    backend: str | None = None
+    anchor: AnchorConfig = AnchorConfig()
+    masking: str = "causal"
+
+    def __post_init__(self) -> None:
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(
+                f"unknown algorithm {self.algorithm!r}; "
+                f"expected one of {ALGORITHMS}"
+            )
+        if self.masking not in MASKINGS:
+            raise ValueError(
+                f"unknown masking {self.masking!r}; expected one of {MASKINGS}"
+            )
+        if self.backend is not None:
+            from repro.kernels import dispatch
+
+            dispatch._validate(self.backend)
+        if not isinstance(self.anchor, AnchorConfig):
+            raise TypeError(
+                f"anchor must be an AnchorConfig, got {type(self.anchor)}"
+            )
+
+    # ------------------------------------------------------------ helpers --
+
+    def padded(self) -> "AttentionSpec":
+        """The same spec with ``masking='padded'`` (varlen calls)."""
+        return dataclasses.replace(self, masking="padded")
+
+    def with_backend(self, backend: str | None) -> "AttentionSpec":
+        return dataclasses.replace(self, backend=backend)
+
+    def with_algorithm(self, algorithm: str) -> "AttentionSpec":
+        return dataclasses.replace(self, algorithm=algorithm)
+
+
+def spec_from_attn_impl(
+    attn_impl: str,
+    anchor_cfg: AnchorConfig | None = None,
+    *,
+    masking: str = "causal",
+    warn: bool = True,
+) -> AttentionSpec:
+    """Map a legacy ``attn_impl`` string (+ optional anchor cfg) to a spec.
+
+    Emits a :class:`DeprecationWarning` unless ``warn=False`` (internal
+    translation sites that already warned, e.g. CLI flags, pass False).
+    """
+    try:
+        algorithm, pinned = _ATTN_IMPL_MAP[attn_impl]
+    except KeyError:
+        raise ValueError(
+            f"unknown attn_impl {attn_impl!r}; expected one of "
+            f"{', '.join(sorted(_ATTN_IMPL_MAP))}"
+        ) from None
+    anchor = anchor_cfg if anchor_cfg is not None else AnchorConfig()
+    backend = pinned if pinned is not None else anchor.backend
+    spec = AttentionSpec(
+        algorithm=algorithm, backend=backend, anchor=anchor, masking=masking)
+    if warn:
+        warnings.warn(
+            f"attn_impl={attn_impl!r} is deprecated; pass "
+            f"spec=AttentionSpec(algorithm={algorithm!r}, "
+            f"backend={backend!r}, ...) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    return spec
+
+
+def resolve_attention_spec(
+    spec: AttentionSpec | None = None,
+    attn_impl: str | None = None,
+    anchor_cfg: AnchorConfig | None = None,
+    *,
+    default_algorithm: str = "dense",
+) -> AttentionSpec:
+    """Resolve the (spec | legacy attn_impl/anchor_cfg) keyword pair.
+
+    Exactly one configuration style may be used per call.  Legacy keywords
+    emit a ``DeprecationWarning`` and are translated via
+    :func:`spec_from_attn_impl`; when neither is given the default is
+    ``AttentionSpec(algorithm=default_algorithm, backend="xla")`` — the
+    historical baseline semantics.
+    """
+    if spec is not None:
+        if attn_impl is not None or anchor_cfg is not None:
+            raise TypeError(
+                "pass either spec= or the legacy attn_impl=/anchor_cfg= "
+                "keywords, not both")
+        return spec
+    if attn_impl is not None:
+        return spec_from_attn_impl(attn_impl, anchor_cfg)
+    if anchor_cfg is not None:
+        warnings.warn(
+            "anchor_cfg= is deprecated; pass spec=AttentionSpec(anchor=...)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        return spec_from_attn_impl(default_algorithm, anchor_cfg, warn=False)
+    return AttentionSpec(algorithm=default_algorithm, backend="xla")

@@ -10,8 +10,6 @@ flash-decoding pattern expressed in ``shard_map`` + ``jax.lax`` collectives
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P

@@ -12,6 +12,7 @@ from repro.kernels.ops import (
     anchor_attention_pallas,
     anchor_phase,
     anchor_phase_pallas,
+    attention,
     flash_attention,
     flash_decode,
     pack_stripe_indices,
@@ -27,6 +28,7 @@ __all__ = [
     "anchor_attention_pallas",
     "anchor_phase",
     "anchor_phase_pallas",
+    "attention",
     "dispatch",
     "flash_attention",
     "flash_decode",

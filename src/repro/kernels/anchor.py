@@ -36,8 +36,8 @@ def _candidate_block(i, w, cfg: AnchorConfig):
 
 
 def _anchor_kernel(
-    q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, ms_ref, ls_ref, accs_ref,
-    *, cfg: AnchorConfig, scale: float, t_n: int
+    q_ref, k_ref, v_ref, len_ref, m_ref, l_ref, acc_ref, ms_ref, ls_ref,
+    accs_ref, *, cfg: AnchorConfig, scale: float, t_n: int
 ):
     i = pl.program_id(1)
     w = pl.program_id(2)
@@ -61,7 +61,9 @@ def _anchor_kernel(
         ) * scale
         row = i * cfg.block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
         col = blk * cfg.block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(col <= row, s, _NEG_INF)
+        length = len_ref[0, 0]
+        s = jnp.where((col <= row) & (col < length) & (row < length),
+                      s, _NEG_INF)
         m_prev = ms_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -89,11 +91,13 @@ def anchor_phase_pallas(
     v: jnp.ndarray,
     cfg: AnchorConfig,
     interpret: bool = True,
+    lengths: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Alg. 1 for batched heads.  q: (B, Hq, N, D); k, v: (B, Hkv, N, D).
 
     Returns ``(m, l, acc)`` with shapes (B, Hq, N), (B, Hq, N), (B, Hq, N, D)
-    in f32 — the anchor statistics.
+    in f32 — the anchor statistics.  With ``lengths`` ((B,) int32), padding
+    keys are masked out and padded query rows emit ``(-1e30, 0, 0)``.
     """
     batch, hq, n, d = q.shape
     hkv = k.shape[1]
@@ -106,6 +110,11 @@ def anchor_phase_pallas(
     qf = q.reshape(batch * hq, n, d)
     kf = k.reshape(batch * hkv, n, d)
     vf = v.reshape(batch * hkv, n, d)
+    if lengths is None:
+        lens = jnp.full((batch,), n, jnp.int32)
+    else:
+        lens = lengths.astype(jnp.int32)
+    lf = jnp.repeat(lens, hq)[:, None]  # (batch*hq, 1)
 
     def kv_index(b, i, w):
         blk = jnp.clip(_candidate_block(i, w, cfg), 0, t_n - 1)
@@ -119,6 +128,7 @@ def anchor_phase_pallas(
             pl.BlockSpec((1, cfg.block_q, d), lambda b, i, w: (b, i, 0)),
             pl.BlockSpec((1, cfg.block_kv, d), kv_index),
             pl.BlockSpec((1, cfg.block_kv, d), kv_index),
+            pl.BlockSpec((1, 1), lambda b, i, w: (b, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, cfg.block_q), lambda b, i, w: (b, i)),
@@ -139,7 +149,7 @@ def anchor_phase_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(qf, kf, vf)
+    )(qf, kf, vf, lf)
     shape = (batch, hq, n)
     return m.reshape(shape), l.reshape(shape), acc.reshape(batch, hq, n, d)
 

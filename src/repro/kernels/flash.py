@@ -7,6 +7,11 @@ head dim (128 or 256 for every assigned arch ⇒ lane-aligned).
 
 GQA is handled in the K/V index maps (``kv_head = q_head // group``) so
 grouped KV is never replicated in HBM.
+
+Variable-length batches: an optional per-sequence ``lengths`` operand (one
+int32 per flattened batch*head row) tightens the causal mask to
+``col <= row < length`` — padding keys contribute nothing and padded query
+rows emit exact zeros (their normalizer is 0; the final divide is guarded).
 """
 
 from __future__ import annotations
@@ -25,7 +30,8 @@ _NEG_INF = -1e30
 
 
 def _flash_kernel(
-    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, block_q, block_kv, scale
+    q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, block_q, block_kv, scale
 ):
     i = pl.program_id(1)
     j = pl.program_id(2)
@@ -46,10 +52,15 @@ def _flash_kernel(
         ) * scale
         row = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
         col = j * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(col <= row, s, _NEG_INF)
+        length = len_ref[0, 0]
+        s = jnp.where((col <= row) & (col < length) & (row < length),
+                      s, _NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
+        # Fully-masked rows (varlen padding) keep m == -1e30; guard the
+        # exp(0) = 1 they would otherwise produce.  No-op for causal rows.
+        p = jnp.where(s <= _NEG_INF, 0.0, p)
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
@@ -60,7 +71,9 @@ def _flash_kernel(
 
     @pl.when(j == pl.num_programs(2) - 1)
     def _finish():
-        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
 
 
 @functools.partial(
@@ -73,8 +86,13 @@ def flash_attention(
     block_q: int = 128,
     block_kv: int = 128,
     interpret: bool = True,
+    lengths: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
-    """Causal flash attention.  q: (B, Hq, N, D); k, v: (B, Hkv, N, D)."""
+    """Causal flash attention.  q: (B, Hq, N, D); k, v: (B, Hkv, N, D).
+
+    ``lengths`` (optional, (B,) int32): valid token counts of a
+    right-padded batch (see :mod:`repro.core.spec`).
+    """
     batch, hq, n, d = q.shape
     block_q, block_kv = min(block_q, n), min(block_kv, n)
     hkv = k.shape[1]
@@ -85,6 +103,11 @@ def flash_attention(
     qf = q.reshape(batch * hq, n, d)
     kf = k.reshape(batch * hkv, n, d)
     vf = v.reshape(batch * hkv, n, d)
+    if lengths is None:
+        lens = jnp.full((batch,), n, jnp.int32)
+    else:
+        lens = lengths.astype(jnp.int32)
+    lf = jnp.repeat(lens, hq)[:, None]  # (batch*hq, 1)
 
     def kv_index(b, i, j):
         del i
@@ -100,6 +123,7 @@ def flash_attention(
             pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
             pl.BlockSpec((1, block_kv, d), kv_index),
             pl.BlockSpec((1, block_kv, d), kv_index),
+            pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((batch * hq, n, d), q.dtype),
@@ -112,7 +136,7 @@ def flash_attention(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(qf, kf, vf)
+    )(qf, kf, vf, lf)
     return out.reshape(batch, hq, n, d)
 
 

@@ -5,6 +5,12 @@ Each function here resolves its implementation through
 ``$REPRO_BACKEND`` → platform), so the same call site runs the pure-XLA
 path, the Pallas kernels in interpret mode, or the compiled TPU kernels.
 
+:func:`attention` is the canonical model-facing entry point: it takes a
+declarative :class:`repro.core.spec.AttentionSpec` (algorithm × backend ×
+masking) plus an optional per-sequence ``lengths`` array for right-padded
+variable-length batches, and dispatches to the dense flash path or the
+AnchorAttention pipeline accordingly.
+
 ``anchor_attention`` on the pallas backends chains Alg. 1 → Alg. 2 → (XLA
 index packing) → Alg. 3.  The packing step converts the kernel's stripe
 hit-mask into dense ``(T_s, capacity)`` gather indices — the static-shape
@@ -12,19 +18,21 @@ TPU stand-in for the paper's dynamic index lists (DESIGN.md §3).  Packing
 is position-ordered and drops nothing when ``capacity >= max selected``,
 which tests assert.
 
-The ``*_pallas`` names are kept as aliases of the dispatched entry points
-for backward compatibility (they resolve to the Pallas kernels under the
-default backend on both CPU and TPU).
+The ``*_pallas`` names are kept as deprecated aliases of the dispatched
+entry points (they resolve to the Pallas kernels under the default backend
+on both CPU and TPU) and emit a ``DeprecationWarning``.
 """
 
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.config import AnchorConfig
+from repro.core.spec import AttentionSpec
 from repro.kernels import dispatch
 
 # Importing the implementation modules populates the backend registry.
@@ -37,6 +45,7 @@ from repro.kernels import stripe_select as _stripe_select  # noqa: F401
 from repro.kernels import xla as _xla  # noqa: F401
 
 __all__ = [
+    "attention",
     "flash_attention",
     "flash_decode",
     "anchor_phase",
@@ -45,12 +54,61 @@ __all__ = [
     "ssd_chunked",
     "anchor_attention",
     "pack_stripe_indices",
-    # Backward-compatible aliases.
+    # Deprecated aliases.
     "anchor_phase_pallas",
     "stripe_select_pallas",
     "sparse_attention_pallas",
     "anchor_attention_pallas",
 ]
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    spec: AttentionSpec | None = None,
+    *,
+    lengths: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Canonical attention entry point — ``repro.attention``.
+
+    Args:
+      q: (B, Hq, N, D); k, v: (B, Hkv, N, D) with Hq % Hkv == 0 (GQA).
+      spec: declarative :class:`AttentionSpec` (default: dense causal on
+        the process-default backend).
+      lengths: (B,) int32 per-sequence valid token counts — required
+        (and only allowed) when ``spec.masking == "padded"``.  Padding
+        keys are masked out of scores, statistics, and stripe selection;
+        padded query rows return exact zeros.
+
+    Returns:
+      (B, Hq, N, Dv) attention output in ``q.dtype``.
+    """
+    spec = spec if spec is not None else AttentionSpec()
+    if spec.masking == "padded" and lengths is None:
+        raise ValueError("spec.masking='padded' requires a lengths array")
+    if spec.masking == "causal" and lengths is not None:
+        raise ValueError(
+            "lengths= passed with spec.masking='causal'; use spec.padded()")
+    backend = dispatch.resolve_backend(spec.backend)
+    out_dtype = q.dtype
+    if backend == "xla":
+        # Run the XLA paths on f32 inputs and cast the output back once.
+        # Both algorithms upcast to f32 internally anyway, but XLA lowers
+        # the mixed bf16→f32 dots of the two algorithms differently, which
+        # leaves dense and anchor outputs 1 bf16 ulp apart on a few
+        # elements — enough to flip MoE top-k routing downstream (the
+        # granite_moe failure).  With f32 inputs both algorithms are
+        # numerically f32 end-to-end.  The pallas backends keep their
+        # native dtype: on TPU the bf16 K/V tiles are half the VMEM
+        # traffic, which is the point.
+        q, k, v = (t.astype(jnp.float32) for t in (q, k, v))
+    if spec.algorithm == "dense":
+        out = flash_attention(q, k, v, lengths=lengths, backend=backend)
+    else:
+        out = anchor_attention(q, k, v, spec.anchor, lengths=lengths,
+                               backend=backend)
+    return out.astype(out_dtype)
 
 
 def flash_attention(
@@ -59,11 +117,13 @@ def flash_attention(
     v: jnp.ndarray,
     block_q: int | None = None,
     block_kv: int | None = None,
+    lengths: jnp.ndarray | None = None,
     backend: str | None = None,
 ) -> jnp.ndarray:
     """Causal flash attention.  q: (B, Hq, N, D); k, v: (B, Hkv, N, D).
 
-    ``block_q``/``block_kv`` default to each backend's own tiling.
+    ``block_q``/``block_kv`` default to each backend's own tiling;
+    ``lengths`` ((B,) int32, optional) masks a right-padded batch.
     """
     fn, _ = dispatch.lookup("flash_attention", backend)
     kw = {}
@@ -71,6 +131,8 @@ def flash_attention(
         kw["block_q"] = block_q
     if block_kv is not None:
         kw["block_kv"] = block_kv
+    if lengths is not None:
+        kw["lengths"] = lengths
     return fn(q, k, v, **kw)
 
 
@@ -93,11 +155,17 @@ def anchor_phase(
     k: jnp.ndarray,
     v: jnp.ndarray,
     cfg: AnchorConfig,
+    lengths: jnp.ndarray | None = None,
     backend: str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Alg. 1 anchor statistics ``(m, l, acc)`` for batched heads."""
+    """Alg. 1 anchor statistics ``(m, l, acc)`` for batched heads.
+
+    With ``lengths``, padding keys are masked out of the statistics and
+    padded rows emit ``(-1e30, 0, 0)``.
+    """
     fn, _ = dispatch.lookup("anchor_phase", backend)
-    return fn(q, k, v, cfg)
+    kw = {} if lengths is None else {"lengths": lengths}
+    return fn(q, k, v, cfg, **kw)
 
 
 def stripe_select(
@@ -105,11 +173,16 @@ def stripe_select(
     m_bar: jnp.ndarray,
     k: jnp.ndarray,
     cfg: AnchorConfig,
+    lengths: jnp.ndarray | None = None,
     backend: str | None = None,
 ) -> jnp.ndarray:
-    """Alg. 2 stripe hit-mask (B, Hq, T_s, N) int32 from pooled inputs."""
+    """Alg. 2 stripe hit-mask (B, Hq, T_s, N) int32 from pooled inputs.
+
+    With ``lengths``, keys at positions >= length are never selected.
+    """
     fn, _ = dispatch.lookup("stripe_select", backend)
-    return fn(q_mean, m_bar, k, cfg)
+    kw = {} if lengths is None else {"lengths": lengths}
+    return fn(q_mean, m_bar, k, cfg, **kw)
 
 
 def sparse_attention(
@@ -152,11 +225,19 @@ def anchor_attention(
     cfg: AnchorConfig,
     block_c: int | None = None,
     return_stats: bool = False,
+    lengths: jnp.ndarray | None = None,
     backend: str | None = None,
 ):
-    """Full AnchorAttention.  q: (B, Hq, N, D); k, v: (B, Hkv, N, D)."""
+    """Full AnchorAttention.  q: (B, Hq, N, D); k, v: (B, Hkv, N, D).
+
+    ``lengths`` ((B,) int32, optional) masks a right-padded batch:
+    padding keys never enter statistics or selection, padded rows return
+    zeros.
+    """
     fn, _ = dispatch.lookup("anchor_attention", backend)
     kw = {} if block_c is None else {"block_c": block_c}
+    if lengths is not None:
+        kw["lengths"] = lengths
     return fn(q, k, v, cfg, return_stats=return_stats, **kw)
 
 
@@ -186,6 +267,7 @@ def _anchor_attention_pipeline(
     cfg: AnchorConfig,
     block_c: int = 128,
     return_stats: bool = False,
+    lengths: jnp.ndarray | None = None,
     *,
     backend: str,
 ):
@@ -200,18 +282,40 @@ def _anchor_attention_pipeline(
     sparse_fn, _ = dispatch.lookup("sparse_attention", backend)
 
     # Alg. 1 — anchor statistics.
-    m, l, acc = phase_fn(q, k, v, cfg)
+    if lengths is None:
+        m, l, acc = phase_fn(q, k, v, cfg)
+    else:
+        m, l, acc = phase_fn(q, k, v, cfg, lengths=lengths)
 
-    # Pooling (cheap XLA reductions feeding Alg. 2).
-    q_mean = jnp.mean(
-        q.reshape(batch, hq, t_m, cfg.block_q, d).astype(jnp.float32), axis=3
-    )
-    m_bar = jnp.mean(m.reshape(batch, hq, t_m, cfg.block_q), axis=3)
+    # Pooling (cheap XLA reductions feeding Alg. 2).  Shares the core
+    # masked-pooling contract: padded rows are excluded; blocks of pure
+    # padding pool to +inf, which can never pass the threshold.
+    from repro.core.anchor_attention import masked_block_mean
+
+    if lengths is None:
+        q_mean = jnp.mean(
+            q.reshape(batch, hq, t_m, cfg.block_q, d).astype(jnp.float32),
+            axis=3)
+        m_bar = jnp.mean(m.reshape(batch, hq, t_m, cfg.block_q), axis=3)
+    else:
+        pool = jax.vmap(  # over batch (with its length) ...
+            jax.vmap(  # ... then heads (shared length)
+                lambda x, L, fill: masked_block_mean(
+                    x, cfg.block_q, L, fill=fill),
+                in_axes=(0, None, None)),
+            in_axes=(0, 0, None))
+        q_mean = pool(q, lengths, 0.0)
+        m_bar = pool(m, lengths, jnp.inf)
     if not cfg.use_anchor:
-        m_bar = jnp.zeros_like(m_bar)
+        zero = jnp.zeros_like(m_bar)
+        m_bar = zero if lengths is None else jnp.where(
+            jnp.isinf(m_bar), m_bar, zero)
 
     # Alg. 2 — stripe hit mask.
-    hit = select_fn(q_mean, m_bar, k, cfg)  # (B, Hq, T_s, N)
+    if lengths is None:
+        hit = select_fn(q_mean, m_bar, k, cfg)  # (B, Hq, T_s, N)
+    else:
+        hit = select_fn(q_mean, m_bar, k, cfg, lengths=lengths)
 
     # XLA packing + gather-compaction (TPU adaptation of discrete loading).
     capacity = cfg.capacity if cfg.capacity is not None else n
@@ -230,6 +334,10 @@ def _anchor_attention_pipeline(
 
     # Alg. 3 — resume the online softmax over gathered stripes.
     out = sparse_fn(q, k_sel, v_sel, valid, m, l, acc, cfg, block_c)
+    if lengths is not None:
+        # Padded query rows produce exact zeros.
+        rows = jnp.arange(n)[None, None, :, None] < lengths[:, None, None, None]
+        out = jnp.where(rows, out, jnp.zeros((), out.dtype))
     if return_stats:
         counts = hit.sum(axis=-1)  # (B, Hq, T_s)
         return out, counts
@@ -256,22 +364,36 @@ def _pallas_backend(backend: str | None) -> str:
     return b
 
 
+def _warn_pallas_alias(name: str) -> None:
+    warnings.warn(
+        f"{name}_pallas is deprecated; call kernels.ops.{name} with "
+        "backend='pallas_interpret' / 'pallas_tpu' (or rely on the "
+        "process-default backend) instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 def anchor_phase_pallas(q, k, v, cfg, backend=None):
+    _warn_pallas_alias("anchor_phase")
     return anchor_phase(q, k, v, cfg, backend=_pallas_backend(backend))
 
 
 def stripe_select_pallas(q_mean, m_bar, k, cfg, backend=None):
+    _warn_pallas_alias("stripe_select")
     return stripe_select(q_mean, m_bar, k, cfg, backend=_pallas_backend(backend))
 
 
 def sparse_attention_pallas(q, k_sel, v_sel, valid, m0, l0, acc0, cfg,
                             block_c=None, backend=None):
+    _warn_pallas_alias("sparse_attention")
     return sparse_attention(q, k_sel, v_sel, valid, m0, l0, acc0, cfg,
                             block_c=block_c, backend=_pallas_backend(backend))
 
 
 def anchor_attention_pallas(q, k, v, cfg, block_c=None, return_stats=False,
                             backend=None):
+    _warn_pallas_alias("anchor_attention")
     return anchor_attention(q, k, v, cfg, block_c=block_c,
                             return_stats=return_stats,
                             backend=_pallas_backend(backend))

@@ -49,6 +49,9 @@ def _sparse_kernel(
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
     p = jnp.exp(s - m_new)
     p = jnp.where(valid[None, :], p, 0.0)
+    # Varlen padding rows resume from m0 == -1e30 with all-invalid tiles;
+    # without this guard exp(s - m_new) above is exp(0) = 1 there.
+    p = jnp.where(s <= _NEG_INF, 0.0, p)
     alpha = jnp.exp(m_prev - m_new)
     ls_ref[...] = ls_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
     accs_ref[...] = accs_ref[...] * alpha + jax.lax.dot_general(
@@ -59,7 +62,11 @@ def _sparse_kernel(
 
     @pl.when(c == pl.num_programs(2) - 1)
     def _finish():
-        o_ref[0] = (accs_ref[...] / ls_ref[...]).astype(o_ref.dtype)
+        # l >= 1 for causal rows (anchor stats include the diagonal); the
+        # guard only protects varlen padding rows with empty statistics.
+        o_ref[0] = (
+            accs_ref[...] / jnp.maximum(ls_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "block_c", "interpret"))

@@ -18,14 +18,14 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
 from repro.core.config import AnchorConfig
 from repro.kernels import dispatch
 
 
-def _select_kernel(qm_ref, mb_ref, k_ref, o_ref, *, cfg: AnchorConfig, scale, t_n):
+def _select_kernel(qm_ref, mb_ref, k_ref, len_ref, o_ref,
+                   *, cfg: AnchorConfig, scale, t_n):
     s_idx = pl.program_id(1)
     j = pl.program_id(2)
     w_start = jnp.maximum(1, s_idx * cfg.step * cfg.r)
@@ -40,6 +40,10 @@ def _select_kernel(qm_ref, mb_ref, k_ref, o_ref, *, cfg: AnchorConfig, scale, t_
         ) * scale
         diff = mb_ref[0][:, None] - s  # (step, block_kv)
         hit = (diff <= cfg.theta).any(axis=0)
+        # Padding keys of a right-padded batch are never stripe-selected.
+        col = j * cfg.block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, hit.shape, 0)
+        hit &= col < len_ref[0, 0]
         o_ref[0, 0] = hit.astype(jnp.int32)
 
     @pl.when(jnp.logical_not(in_candidate))
@@ -54,14 +58,18 @@ def stripe_select_pallas(
     k: jnp.ndarray,
     cfg: AnchorConfig,
     interpret: bool = True,
+    lengths: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Alg. 2 for batched heads.
 
     Args:
       q_mean: (B, Hq, T_m, D) block-pooled queries.
       m_bar: (B, Hq, T_m) block-pooled anchors (zeros for the
-        "Without Anchor" ablation).
+        "Without Anchor" ablation; +inf rows are skipped — callers use
+        that for all-padding pooled blocks of varlen batches).
       k: (B, Hkv, N, D) keys.
+      lengths: optional (B,) int32 valid token counts — keys at positions
+        >= length are never selected.
 
     Returns:
       (B, Hq, T_s, N) int32 hit mask (1 = stripe selected).
@@ -83,6 +91,11 @@ def stripe_select_pallas(
     qf = q_mean.reshape(batch * hq, t_s * cfg.step, d)
     mf = m_bar.reshape(batch * hq, t_s * cfg.step)
     kf = k.reshape(batch * hkv, n, d)
+    if lengths is None:
+        lens = jnp.full((batch,), n, jnp.int32)
+    else:
+        lens = lengths.astype(jnp.int32)
+    lf = jnp.repeat(lens, hq)[:, None]  # (batch*hq, 1)
 
     def kv_index(b, s, j):
         del s
@@ -96,6 +109,7 @@ def stripe_select_pallas(
             pl.BlockSpec((1, cfg.step, d), lambda b, s, j: (b, s, 0)),
             pl.BlockSpec((1, cfg.step), lambda b, s, j: (b, s)),
             pl.BlockSpec((1, cfg.block_kv, d), kv_index),
+            pl.BlockSpec((1, 1), lambda b, s, j: (b, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, cfg.block_kv), lambda b, s, j: (b, s, j)),
         out_shape=jax.ShapeDtypeStruct((batch * hq, t_s, n), jnp.int32),
@@ -103,7 +117,7 @@ def stripe_select_pallas(
             dimension_semantics=("parallel", "parallel", "parallel")
         ),
         interpret=interpret,
-    )(qf, mf, kf)
+    )(qf, mf, kf, lf)
     return out.reshape(batch, hq, t_s, n)
 
 

@@ -33,16 +33,19 @@ def flash_attention_xla(
     v: jnp.ndarray,
     block_q: int = 128,
     block_kv: int = 1024,
+    lengths: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Dense causal attention — blockwise online-softmax over KV blocks.
 
     ``block_q`` only tiles the Pallas grid; the XLA scan has no query
-    blocking, so it is accepted and ignored.
+    blocking, so it is accepted and ignored.  ``lengths`` ((B,) int32,
+    optional) masks a right-padded batch (see :mod:`repro.core.spec`).
     """
     del block_q
     from repro.models.layers import blockwise_attention
 
-    return blockwise_attention(q, k, v, block_kv=min(block_kv, k.shape[2]))
+    return blockwise_attention(
+        q, k, v, block_kv=min(block_kv, k.shape[2]), lengths=lengths)
 
 
 @dispatch.register("flash_decode", "xla")
@@ -62,9 +65,17 @@ def flash_decode_xla(
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def anchor_phase_xla(
-    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, cfg: AnchorConfig
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: AnchorConfig,
+    lengths: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Alg. 1 anchor statistics, batched heads — vmapped core implementation."""
+    """Alg. 1 anchor statistics, batched heads — vmapped core implementation.
+
+    With ``lengths`` ((B,) int32), padding keys of a right-padded batch are
+    masked out of the statistics and padded rows emit ``(-1e30, 0, 0)``.
+    """
     from repro.core.anchor_attention import anchor_phase
 
     hq, hkv = q.shape[1], k.shape[1]
@@ -72,9 +83,9 @@ def anchor_phase_xla(
         rep = hq // hkv
         k = jnp.repeat(k, rep, axis=1)
         v = jnp.repeat(v, rep, axis=1)
-    fn = jax.vmap(jax.vmap(anchor_phase, in_axes=(0, 0, 0, None)),
-                  in_axes=(0, 0, 0, None))
-    state = fn(q, k, v, cfg)
+    fn = jax.vmap(jax.vmap(anchor_phase, in_axes=(0, 0, 0, None, None)),
+                  in_axes=(0, 0, 0, None, 0 if lengths is not None else None))
+    state = fn(q, k, v, cfg, lengths)
     return state.m, state.l, state.acc
 
 
@@ -83,12 +94,17 @@ dispatch.register("anchor_phase", "xla")(anchor_phase_xla)
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def stripe_select_xla(
-    q_mean: jnp.ndarray, m_bar: jnp.ndarray, k: jnp.ndarray, cfg: AnchorConfig
+    q_mean: jnp.ndarray,
+    m_bar: jnp.ndarray,
+    k: jnp.ndarray,
+    cfg: AnchorConfig,
+    lengths: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Alg. 2 stripe hit-mask from pooled inputs — same contract as the kernel.
 
     q_mean: (B, Hq, T_m, D); m_bar: (B, Hq, T_m); k: (B, Hkv, N, D).
-    Returns (B, Hq, T_s, N) int32.
+    Returns (B, Hq, T_s, N) int32.  With ``lengths`` ((B,) int32), keys at
+    positions >= length are never selected.
     """
     batch, hq, t_m, d = q_mean.shape
     hkv, n = k.shape[1], k.shape[2]
@@ -113,7 +129,10 @@ def stripe_select_xla(
         jnp.maximum(1, jnp.arange(t_s) * cfg.step * cfg.r) * cfg.block_kv
     )[:, None]
     cand = (kidx >= cfg.block_kv) & (kidx < w_start_tok)
-    return (hit & cand[None, None]).astype(jnp.int32)
+    hit = hit & cand[None, None]
+    if lengths is not None:
+        hit &= jnp.arange(n)[None, None, None, :] < lengths[:, None, None, None]
+    return hit.astype(jnp.int32)
 
 
 dispatch.register("stripe_select", "xla")(stripe_select_xla)
@@ -153,10 +172,13 @@ def sparse_attention_xla(
     m_new = jnp.maximum(m0b, jnp.max(s, axis=-1))
     p = jnp.exp(s - m_new[..., None])
     p = jnp.where(ok[:, :, :, None, :], p, 0.0)
+    # Varlen padding rows resume from m0 == -1e30 with all-invalid tiles;
+    # the guards keep them at exactly zero mass (no-ops for causal rows).
+    p = jnp.where(s <= _NEG_INF, 0.0, p)
     alpha = jnp.exp(m0b - m_new)
     l_new = l0b * alpha + jnp.sum(p, axis=-1)
     acc_new = acc0b * alpha[..., None] + jnp.einsum("bhiqc,bhicd->bhiqd", p, vs)
-    out = acc_new / l_new[..., None]
+    out = acc_new / jnp.maximum(l_new, 1e-30)[..., None]
     return out.reshape(batch, h, n, d).astype(q.dtype)
 
 
@@ -171,16 +193,19 @@ def anchor_attention_xla(
     cfg: AnchorConfig,
     block_c: int = 128,
     return_stats: bool = False,
+    lengths: jnp.ndarray | None = None,
 ):
     """Full AnchorAttention — the production static-capacity XLA pipeline.
 
     ``block_c`` is the Pallas capacity tile; the XLA path picks its own
-    sparse-phase chunking, so it is accepted and ignored.
+    sparse-phase chunking, so it is accepted and ignored.  ``lengths``
+    ((B,) int32, optional) masks a right-padded batch.
     """
     del block_c
     from repro.core.anchor_attention import anchor_attention
 
-    return anchor_attention(q, k, v, cfg, return_stats=return_stats)
+    return anchor_attention(q, k, v, cfg, return_stats=return_stats,
+                            lengths=lengths)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

@@ -25,18 +25,12 @@ import json
 import time
 import traceback
 
-import jax
-
 from repro.configs import ARCH_IDS, SHAPES, get_config, shapes_for
 from repro.core.config import AnchorConfig
 from repro.launch import steps as steps_lib
 from repro.launch.hlo_analysis import summarize_compiled
 from repro.launch.mesh import make_production_mesh, mesh_num_devices
-from repro.launch.roofline import (
-    combine_scan_corrected,
-    model_flops,
-    roofline,
-)
+from repro.launch.roofline import combine_scan_corrected, roofline
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../..", "results", "dryrun")
 
@@ -79,6 +73,7 @@ def run_cell(
             anchor_cfg = AnchorConfig(
                 theta=anchor_cfg.theta, step=anchor_cfg.step,
                 capacity=anchor_capacity)
+        rec["attention_spec"] = str(cell.attention_spec(anchor_cfg))
         fn, arg_specs = steps_lib.build_step(
             arch, shape_name, mesh, attn_impl=attn_impl, remat=remat,
             remat_policy=remat_policy, cfg_overrides=cfg_overrides, sp=sp,

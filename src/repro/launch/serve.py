@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.configs import get_config, get_reduced_config
 from repro.core.config import AnchorConfig
+from repro.core.spec import AttentionSpec
 from repro.kernels import dispatch
 from repro.models import model as model_lib
 from repro.serving import Request, ServingEngine
@@ -44,16 +45,19 @@ def main() -> None:
     anchor_cfg = AnchorConfig(
         block_q=16, block_kv=16, step=2, theta=args.theta,
         backend=args.backend)
-    # An explicit pallas --backend routes long-prompt prefill through the
-    # dispatched kernel pipeline (attn_impl="pallas" honors
-    # anchor_cfg.backend).  "xla" (and the default) keep attn_impl=
-    # "anchor" — the same pipeline pinned to the XLA backend, which also
-    # carries the f32-input guard against bf16 MoE routing flips.
-    use_pallas = args.backend not in (None, "xla")
+    # An explicit pallas --backend routes prefill through the dispatched
+    # kernel pipeline; "xla" (and the default) pin the same pipeline to
+    # the XLA backend, which also carries the f32-input guard against
+    # bf16 MoE routing flips (repro.kernels.ops.attention).
+    spec = AttentionSpec(
+        algorithm="anchor",
+        backend=args.backend if args.backend else "xla",
+        anchor=anchor_cfg)
+    # Cache must fit prompts padded for sparse prefill or the engine
+    # records a dense fallback.
+    max_len = anchor_cfg.prefill_pad_len(args.prompt_len) + args.max_new + 8
     engine = ServingEngine(
-        params, cfg, max_batch=args.max_batch,
-        max_len=args.prompt_len + args.max_new + 8, anchor_cfg=anchor_cfg,
-        attn_impl="pallas" if use_pallas else "anchor")
+        params, cfg, max_batch=args.max_batch, max_len=max_len, spec=spec)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
@@ -68,6 +72,7 @@ def main() -> None:
     total_tokens = sum(len(r.generated) for r in done)
     print(f"{len(done)} requests, {total_tokens} tokens in {dt:.1f}s "
           f"({total_tokens / max(dt, 1e-9):.1f} tok/s CPU)")
+    print(f"engine stats: {engine.stats}")
 
 
 if __name__ == "__main__":

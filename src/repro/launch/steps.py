@@ -13,7 +13,6 @@ For every (arch × shape) cell this module provides:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax
@@ -21,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.config import AnchorConfig
+from repro.core.spec import AttentionSpec, spec_from_attn_impl
 from repro.configs import SHAPES, ShapeSpec, get_config
 from repro.distributed import sharding as sh
 from repro.models import model as model_lib
@@ -42,8 +42,12 @@ class CellSpec:
     shape: ShapeSpec
     cfg: ModelConfig
     kind: str  # train | prefill | decode
-    attn_impl: str
+    attn_impl: str  # legacy string, recorded in dry-run JSON
     seq_shard_cache: bool  # long_500k: shard KV cache over `data`
+
+    def attention_spec(self, anchor_cfg: AnchorConfig) -> AttentionSpec:
+        """The cell's declarative AttentionSpec (internal translation)."""
+        return spec_from_attn_impl(self.attn_impl, anchor_cfg, warn=False)
 
 
 def make_cell(arch: str, shape_name: str, *, attn_impl: str | None = None,
@@ -173,11 +177,12 @@ def make_train_step(
     (gradient accumulation — activation memory scales with the microbatch
     while the effective batch stays global)."""
     cfg = cell.cfg
+    attn_spec = cell.attention_spec(AnchorConfig())
 
     def loss_and_grad(params, batch):
         def loss(p):
             return model_lib.loss_fn(
-                p, batch, cfg, attn_impl=cell.attn_impl, remat=remat,
+                p, batch, cfg, spec=attn_spec, remat=remat,
                 remat_policy=remat_policy, moe_parallel=moe_parallel,
                 sp_spec=sp_spec)
 
@@ -216,6 +221,7 @@ def make_train_step(
 def make_prefill_step(cell: CellSpec, anchor_cfg: AnchorConfig = PROD_ANCHOR,
                       moe_parallel: MoEParallelism | None = None):
     cfg = cell.cfg
+    attn_spec = cell.attention_spec(anchor_cfg)
 
     def prefill_step(params, batch):
         return model_lib.prefill(
@@ -223,8 +229,7 @@ def make_prefill_step(cell: CellSpec, anchor_cfg: AnchorConfig = PROD_ANCHOR,
             batch.get("tokens"),
             cfg,
             embeds=batch.get("embeds"),
-            attn_impl=cell.attn_impl,
-            anchor_cfg=anchor_cfg,
+            spec=attn_spec,
             moe_parallel=moe_parallel,
         )
 
@@ -346,11 +351,12 @@ def build_group_probe(
 
     positions = jnp.arange(n)[None].repeat(1, axis=0)  # traced inside
 
+    attn_spec = cell.attention_spec(anchor_cfg)
     if cell.kind == "train":
         def probe(gp, x):
             group_fn = transformer.make_group_fn(
                 cfg, jnp.broadcast_to(jnp.arange(n), (x.shape[0], n)),
-                attn_impl=cell.attn_impl, anchor_cfg=anchor_cfg,
+                spec=attn_spec,
                 remat=remat, remat_policy=remat_policy,
                 moe_parallel=moe_par, sp_spec=sp_spec)
 
@@ -367,7 +373,7 @@ def build_group_probe(
         def probe(gp, x):
             group_fn = transformer.make_group_fn(
                 cfg, jnp.broadcast_to(jnp.arange(n), (x.shape[0], n)),
-                attn_impl=cell.attn_impl, anchor_cfg=anchor_cfg,
+                spec=attn_spec,
                 remat=False, return_cache=True, moe_parallel=moe_par)
             y, (aux, caches) = group_fn(x, gp)
             return y, caches

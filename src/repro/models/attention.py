@@ -1,14 +1,15 @@
 """Attention blocks: GQA (with AnchorAttention prefill backend) and MLA.
 
-``attn_impl`` selects the prefill path; every path routes through the
-kernel backend registry (:mod:`repro.kernels.dispatch`):
-  * "dense"  — dense flash attention, pinned to the ``xla`` backend
-    (blockwise online softmax; the baseline).
-  * "anchor" — AnchorAttention, pinned to the ``xla`` backend (the
-    static-capacity production path).
-  * "pallas" — AnchorAttention on ``anchor_cfg.backend`` (process default
-    when unset: Pallas kernels, interpret mode off-TPU).
-  * "pallas_flash" — dense flash attention on ``anchor_cfg.backend``.
+Prefill attention is configured by a declarative
+:class:`repro.core.spec.AttentionSpec` (algorithm × backend × masking) and
+executed through the canonical :func:`repro.kernels.ops.attention` entry
+point — every path routes through the kernel backend registry
+(:mod:`repro.kernels.dispatch`).  Variable-length right-padded batches
+pass a per-sequence ``lengths`` array (``spec.masking == "padded"``).
+
+The legacy ``attn_impl`` strings ("dense" | "anchor" | "pallas" |
+"pallas_flash") map onto specs via
+:func:`repro.core.spec.spec_from_attn_impl` at the model entry points.
 
 Decode always uses dense KV-cache attention (the paper is prefill-only,
 Limitations §).
@@ -21,7 +22,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.config import AnchorConfig
+from repro.core.spec import AttentionSpec
 from repro.models.config import ModelConfig
 from repro.models.layers import (
     apply_rope,
@@ -34,38 +35,14 @@ from repro.models.layers import (
 Params = dict[str, Any]
 
 
-def _prefill_attention(q, k, v, attn_impl: str, anchor_cfg: AnchorConfig | None):
+def _prefill_attention(q, k, v, spec: AttentionSpec | None,
+                       lengths: jnp.ndarray | None = None):
     from repro.kernels import ops as kernel_ops
 
-    out_dtype = q.dtype
-    cfg = anchor_cfg or AnchorConfig()
-    if attn_impl in ("dense", "anchor"):
-        # Run the XLA baselines on f32 inputs and cast the output back
-        # once.  Both impls upcast to f32 internally anyway, but XLA
-        # lowers the mixed bf16→f32 dots of the two algorithms
-        # differently, which leaves the dense and anchor outputs 1 bf16
-        # ulp apart on a few elements — enough to flip MoE top-k routing
-        # downstream and blow a ~0.004 attention difference up to ~0.16
-        # in the logits (the granite_moe failure).  With f32 inputs both
-        # algorithms are numerically f32 end-to-end and their ≲1e-6
-        # ordering noise survives the output cast bit-identically.  The
-        # pallas paths below keep their native dtype: on TPU the bf16
-        # K/V tiles are half the VMEM traffic, which is the point.
-        q, k, v = (t.astype(jnp.float32) for t in (q, k, v))
-        if attn_impl == "dense":
-            out = kernel_ops.flash_attention(q, k, v, backend="xla")
-        else:
-            out = kernel_ops.anchor_attention(q, k, v, cfg, backend="xla")
-    elif attn_impl == "pallas":
-        out = kernel_ops.anchor_attention(q, k, v, cfg, backend=cfg.backend)
-    elif attn_impl == "pallas_flash":
-        out = kernel_ops.flash_attention(q, k, v, backend=cfg.backend)
-    else:
-        raise ValueError(
-            f"unknown attn_impl {attn_impl!r}; expected dense | anchor | "
-            "pallas | pallas_flash"
-        )
-    return out.astype(out_dtype)
+    spec = spec if spec is not None else AttentionSpec(backend="xla")
+    if lengths is not None and spec.masking != "padded":
+        spec = spec.padded()
+    return kernel_ops.attention(q, k, v, spec, lengths=lengths)
 
 
 # ------------------------------------------------------------------ GQA ----
@@ -93,8 +70,8 @@ def gqa_apply(
     cfg: ModelConfig,
     positions: jnp.ndarray,
     *,
-    attn_impl: str = "dense",
-    anchor_cfg: AnchorConfig | None = None,
+    spec: AttentionSpec | None = None,
+    lengths: jnp.ndarray | None = None,
     return_cache: bool = False,
 ):
     """Prefill self-attention.  x: (B, N, d_model); positions: (B, N)."""
@@ -109,7 +86,7 @@ def gqa_apply(
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     q, k, v = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))  # (B, H, N, D)
-    out = _prefill_attention(q, k, v, attn_impl, anchor_cfg)
+    out = _prefill_attention(q, k, v, spec, lengths)
     out = jnp.swapaxes(out, 1, 2).reshape(b, n, h * hd)
     out = out @ p["wo"]
     if return_cache:
@@ -198,8 +175,8 @@ def mla_apply(
     cfg: ModelConfig,
     positions: jnp.ndarray,
     *,
-    attn_impl: str = "dense",
-    anchor_cfg: AnchorConfig | None = None,
+    spec: AttentionSpec | None = None,
+    lengths: jnp.ndarray | None = None,
     return_cache: bool = False,
 ):
     b, n, _ = x.shape
@@ -207,7 +184,7 @@ def mla_apply(
     q, k, v = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
     # Note the asymmetric head dims (qk: nope+rope, v: v_head_dim); the
     # anchor/pallas paths support that directly (D only enters via scale).
-    out = _prefill_attention(q, k, v, attn_impl, anchor_cfg)
+    out = _prefill_attention(q, k, v, spec, lengths)
     out = jnp.swapaxes(out, 1, 2).reshape(b, n, cfg.num_heads * cfg.v_head_dim)
     out = out @ p["wo"]
     if return_cache:

@@ -86,11 +86,16 @@ def blockwise_attention(
     v: jnp.ndarray,
     block_kv: int = 1024,
     causal: bool = True,
+    lengths: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Memory-efficient causal attention — the XLA 'full attention' path.
 
     Online-softmax scan over KV blocks; never materializes (N, N).
     q: (B, Hq, N, D); k, v: (B, Hkv, S, D).  Differentiable (scan AD).
+
+    ``lengths`` (optional, (B,) int32): per-sequence valid token counts of
+    a right-padded batch — padding keys are masked out and padded query
+    rows return exact zeros.
     """
     b, hq, n, d = q.shape
     hkv, s = k.shape[1], k.shape[2]
@@ -121,10 +126,15 @@ def blockwise_attention(
         valid = cols[None, :] < s
         if causal:
             valid = valid & (cols[None, :] <= rows[:, None])
-        sc = jnp.where(valid[None, None], sc, _NEG_INF)
+        valid = valid[None, None]  # (1, 1, N, block) or (1, 1, 1, block)
+        if lengths is not None:
+            lb = lengths[:, None, None, None]
+            valid = valid & (cols[None, None, None, :] < lb) & (
+                rows[None, None, :, None] < lb)
+        sc = jnp.where(valid, sc, _NEG_INF)
         m_new = jnp.maximum(m, sc.max(-1))
         p = jnp.exp(sc - m_new[..., None])
-        p = jnp.where(valid[None, None], p, 0.0)
+        p = jnp.where(valid, p, 0.0)
         alpha = jnp.exp(m - m_new)
         l = l * alpha + p.sum(-1)
         acc = acc * alpha[..., None] + jnp.einsum(

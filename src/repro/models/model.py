@@ -6,13 +6,13 @@
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.config import AnchorConfig
+from repro.core.spec import AttentionSpec, resolve_attention_spec
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.models.layers import rmsnorm, rmsnorm_init
@@ -52,7 +52,9 @@ def forward(
     *,
     embeds: jnp.ndarray | None = None,
     positions: jnp.ndarray | None = None,
-    attn_impl: str = "dense",
+    spec: AttentionSpec | None = None,
+    lengths: jnp.ndarray | None = None,
+    attn_impl: str | None = None,
     anchor_cfg: AnchorConfig | None = None,
     ssm_impl: str = "xla",
     remat: bool = True,
@@ -60,7 +62,14 @@ def forward(
     moe_parallel: MoEParallelism | None = None,
     sp_spec=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Prefill forward pass -> (logits (B, N, V), aux_loss)."""
+    """Prefill forward pass -> (logits (B, N, V), aux_loss).
+
+    Attention is configured by ``spec`` (an :class:`AttentionSpec`;
+    default: dense on ``xla``).  ``lengths`` ((B,) int32, optional) marks
+    a right-padded batch.  ``attn_impl=``/``anchor_cfg=`` are deprecated
+    and translate to a spec with a ``DeprecationWarning``.
+    """
+    spec = resolve_attention_spec(spec, attn_impl, anchor_cfg)
     if cfg.embed_input:
         assert embeds is not None, f"{cfg.name} takes precomputed embeddings"
         x = embeds.astype(jnp.dtype(cfg.dtype))
@@ -73,7 +82,7 @@ def forward(
         positions = jnp.broadcast_to(jnp.arange(n), (b, n))
     x, aux = transformer.stack_apply(
         x, params["blocks"], cfg, positions,
-        attn_impl=attn_impl, anchor_cfg=anchor_cfg, ssm_impl=ssm_impl,
+        spec=spec, lengths=lengths, ssm_impl=ssm_impl,
         remat=remat, remat_policy=remat_policy, moe_parallel=moe_parallel,
         sp_spec=sp_spec)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
@@ -85,7 +94,8 @@ def loss_fn(
     batch: dict[str, jnp.ndarray],
     cfg: ModelConfig,
     *,
-    attn_impl: str = "dense",
+    spec: AttentionSpec | None = None,
+    attn_impl: str | None = None,
     anchor_cfg: AnchorConfig | None = None,
     aux_weight: float = 0.01,
     remat: bool = True,
@@ -94,13 +104,13 @@ def loss_fn(
     sp_spec=None,
 ) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
     """Next-token cross-entropy (+ MoE aux).  batch: tokens/embeds, labels."""
+    spec = resolve_attention_spec(spec, attn_impl, anchor_cfg)
     logits, aux = forward(
         params,
         batch.get("tokens"),
         cfg,
         embeds=batch.get("embeds"),
-        attn_impl=attn_impl,
-        anchor_cfg=anchor_cfg,
+        spec=spec,
         remat=remat,
         remat_policy=remat_policy,
         moe_parallel=moe_parallel,
@@ -122,19 +132,32 @@ def prefill(
     cfg: ModelConfig,
     *,
     embeds: jnp.ndarray | None = None,
-    attn_impl: str = "anchor",
+    spec: AttentionSpec | None = None,
+    lengths: jnp.ndarray | None = None,
+    attn_impl: str | None = None,
     anchor_cfg: AnchorConfig | None = None,
     ssm_impl: str = "xla",
     moe_parallel: MoEParallelism | None = None,
 ) -> tuple[jnp.ndarray, Params]:
     """Serving prefill: last-position logits + populated per-layer cache.
 
-    This is the step the paper accelerates — ``attn_impl="anchor"`` runs
+    This is the step the paper accelerates — the default spec runs
     AnchorAttention on every attention layer (falls back to dense for
-    attention-free archs via the caller).
+    attention-free archs).
+
+    ``lengths`` ((B,) int32, optional) enables right-padded batched
+    prefill: each sequence ``b`` occupies ``tokens[b, :lengths[b]]``, the
+    returned logits are taken at each sequence's own last valid position,
+    and cache positions beyond a sequence's length hold padding (callers
+    resume decode at ``pos = lengths[b]``).
     """
+    spec = resolve_attention_spec(spec, attn_impl, anchor_cfg,
+                                  default_algorithm="anchor")
     if not cfg.has_attention:
-        attn_impl = "dense"  # mamba2: no attention layers to sparsify
+        # mamba2: no attention layers to sparsify.
+        spec = spec.with_algorithm("dense")
+    if lengths is not None and spec.masking != "padded":
+        spec = spec.padded()
     if cfg.embed_input:
         assert embeds is not None
         x = embeds.astype(jnp.dtype(cfg.dtype))
@@ -145,9 +168,16 @@ def prefill(
     positions = jnp.broadcast_to(jnp.arange(n), (b, n))
     x, _, cache = transformer.stack_apply(
         x, params["blocks"], cfg, positions,
-        attn_impl=attn_impl, anchor_cfg=anchor_cfg, ssm_impl=ssm_impl,
+        spec=spec, lengths=lengths, ssm_impl=ssm_impl,
         remat=False, return_cache=True, moe_parallel=moe_parallel)
-    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    if lengths is None:
+        x_last = x[:, -1:]
+    else:
+        # Per-sequence last *valid* position of the right-padded batch.
+        idx = (lengths.astype(jnp.int32) - 1)[:, None, None]
+        x_last = jnp.take_along_axis(
+            x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
+    x = rmsnorm(x_last, params["final_norm"], cfg.norm_eps)
     return _logits(x, params)[:, 0], cache
 
 
@@ -159,8 +189,13 @@ def decode_step(
     cfg: ModelConfig,
     *,
     embed: jnp.ndarray | None = None,
+    active: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, Params]:
     """One decode step.  token: (B,) int32 (or embed (B, 1, d)); pos: ().
+
+    ``active`` (optional, (B,) bool) restricts cache/state writes to the
+    given batch slots — required when decoding one position group of a
+    mixed-position batch (see :func:`transformer.stack_decode`).
 
     Returns (logits (B, V), new_cache).
     """
@@ -169,7 +204,8 @@ def decode_step(
         x = embed.astype(jnp.dtype(cfg.dtype))
     else:
         x = jnp.take(params["embed"], token[:, None], axis=0)
-    x, new_cache = transformer.stack_decode(x, params["blocks"], cache, cfg, pos)
+    x, new_cache = transformer.stack_decode(
+        x, params["blocks"], cache, cfg, pos, active=active)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     return _logits(x, params)[:, 0], new_cache
 

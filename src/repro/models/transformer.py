@@ -10,14 +10,13 @@ HLO contains one group body regardless of depth — essential for the
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
-from repro.core.config import AnchorConfig
+from repro.core.spec import AttentionSpec
 from repro.models import attention as attn_lib
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
@@ -75,8 +74,8 @@ def _layer_apply(
     mixer: str,
     ffn: str,
     positions: jnp.ndarray,
-    attn_impl: str,
-    anchor_cfg: AnchorConfig | None,
+    spec: AttentionSpec | None,
+    lengths: jnp.ndarray | None,
     ssm_impl: str,
     return_cache: bool = False,
     moe_parallel: MoEParallelism | None = None,
@@ -87,8 +86,8 @@ def _layer_apply(
     h = rmsnorm(x, p["norm_mixer"], cfg.norm_eps)
     if mixer == "attn":
         apply = attn_lib.mla_apply if cfg.use_mla else attn_lib.gqa_apply
-        h = apply(h, p["attn"], cfg, positions, attn_impl=attn_impl,
-                  anchor_cfg=anchor_cfg, return_cache=return_cache)
+        h = apply(h, p["attn"], cfg, positions, spec=spec,
+                  lengths=lengths, return_cache=return_cache)
     else:
         h = ssm_lib.mamba_apply(h, p["mamba"], cfg, ssm_impl=ssm_impl,
                                 return_cache=return_cache)
@@ -117,8 +116,8 @@ def make_group_fn(
     cfg: ModelConfig,
     positions: jnp.ndarray,
     *,
-    attn_impl: str = "dense",
-    anchor_cfg: AnchorConfig | None = None,
+    spec: AttentionSpec | None = None,
+    lengths: jnp.ndarray | None = None,
     ssm_impl: str = "xla",
     remat: bool = True,
     remat_policy: str = "nothing",
@@ -139,8 +138,8 @@ def make_group_fn(
         caches = {}
         for i, (mixer, ffn) in enumerate(layout):
             x, aux, cache = _layer_apply(
-                x, gp[f"l{i}"], cfg, mixer, ffn, positions, attn_impl,
-                anchor_cfg, ssm_impl, return_cache, moe_parallel, sp_spec)
+                x, gp[f"l{i}"], cfg, mixer, ffn, positions, spec,
+                lengths, ssm_impl, return_cache, moe_parallel, sp_spec)
             aux_total = aux_total + aux
             if return_cache:
                 caches[f"l{i}"] = cache
@@ -168,8 +167,8 @@ def stack_apply(
     cfg: ModelConfig,
     positions: jnp.ndarray,
     *,
-    attn_impl: str = "dense",
-    anchor_cfg: AnchorConfig | None = None,
+    spec: AttentionSpec | None = None,
+    lengths: jnp.ndarray | None = None,
     ssm_impl: str = "xla",
     remat: bool = True,
     remat_policy: str = "nothing",
@@ -179,7 +178,7 @@ def stack_apply(
 ):
     """Run the decoder stack.  Returns (hidden, aux) or (hidden, aux, cache)."""
     group_fn = make_group_fn(
-        cfg, positions, attn_impl=attn_impl, anchor_cfg=anchor_cfg,
+        cfg, positions, spec=spec, lengths=lengths,
         ssm_impl=ssm_impl, remat=remat, remat_policy=remat_policy,
         return_cache=return_cache, moe_parallel=moe_parallel,
         sp_spec=sp_spec)
@@ -219,9 +218,21 @@ def stack_decode(
     cache: Params,
     cfg: ModelConfig,
     pos: jnp.ndarray,
+    active: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, Params]:
-    """One-token decode through the stack.  x: (B, 1, d)."""
+    """One-token decode through the stack.  x: (B, 1, d).
+
+    ``active`` (optional, (B,) bool): batch slots whose caches/states may
+    be written this step.  Schedulers that decode position groups of a
+    mixed-position batch MUST pass it — without it every decoder writes
+    K/V (or advances recurrent state) at ``pos`` for ALL slots, corrupting
+    the history of slots that are past ``pos``.
+    """
     layout = cfg.group_layout()
+
+    def keep_active(new_leaf, old_leaf):
+        mask = active.reshape(-1, *([1] * (new_leaf.ndim - 1)))
+        return jnp.where(mask, new_leaf, old_leaf)
 
     def group_fn(x, inp):
         gp, gc = inp
@@ -238,6 +249,8 @@ def stack_decode(
                 h, nc = dec(h, p["attn"], gc[f"l{i}"], cfg, pos)
             else:
                 h, nc = ssm_lib.mamba_decode(h, p["mamba"], gc[f"l{i}"], cfg)
+            if active is not None:
+                nc = jax.tree.map(keep_active, nc, gc[f"l{i}"])
             new_gc[f"l{i}"] = nc
             x = x + h
             if ffn != "none":

@@ -6,10 +6,23 @@ prefill with the paper's AnchorAttention (the whole point: prefill is the
 quadratic phase), then join the decode batch; finished sequences free their
 slot for queued requests.  All compute paths are the jitted model fns —
 the scheduler is plain Python (it runs on the host in production too).
+
+Variable-length prefill: attention-only architectures right-pad any mix of
+prompt lengths up to the next AnchorAttention superblock boundary and run
+ONE batched padded prefill per admission wave (``lengths`` masking — see
+:mod:`repro.core.spec`), so sparse prefill never silently degrades to
+dense just because a prompt length isn't block-aligned.  Architectures
+with recurrent state (mamba/hybrid) keep the per-request unpadded path:
+an unmasked SSM scan over padding would corrupt the state.
+
+Observability: ``engine.stats`` counts prefill requests, batched padded
+calls, padded throwaway tokens, and — crucially — ``dense_fallbacks``,
+the silent-degradation class of bug this engine used to hide.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any
 
@@ -18,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.config import AnchorConfig
+from repro.core.spec import AttentionSpec, resolve_attention_spec
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
 
@@ -38,24 +52,41 @@ class ServingEngine:
         cfg: ModelConfig,
         max_batch: int = 8,
         max_len: int = 2048,
+        spec: AttentionSpec | None = None,
         anchor_cfg: AnchorConfig | None = None,
-        attn_impl: str = "anchor",
+        attn_impl: str | None = None,
         greedy: bool = True,
+        batch_prefill: bool = True,
     ):
         self.params = params
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
-        self.anchor_cfg = anchor_cfg
-        self.attn_impl = attn_impl if cfg.has_attention else "dense"
+        spec = resolve_attention_spec(spec, attn_impl, anchor_cfg,
+                                      default_algorithm="anchor")
+        if not cfg.has_attention:
+            spec = spec.with_algorithm("dense")
+        self.spec = spec
         self.greedy = greedy
+        # Padded batched prefill needs every mixer to mask by `lengths`;
+        # recurrent mixers (mamba) would scan over the padding.
+        self._attention_only = all(
+            mixer == "attn" for mixer, _ in cfg.group_layout())
+        self.batch_prefill = batch_prefill and self._attention_only
         self.cache = model_lib.init_cache(cfg, max_batch, max_len)
         self.slot_pos = np.zeros(max_batch, np.int32)  # next write position
         self.slot_req: list[Request | None] = [None] * max_batch
-        self.queue: list[Request] = []
+        self.queue: collections.deque[Request] = collections.deque()
+        self.stats: dict[str, int] = {
+            "prefill_requests": 0,
+            "batched_prefills": 0,
+            "dense_fallbacks": 0,
+            "padded_tokens": 0,
+        }
 
         self._decode = jax.jit(
-            lambda p, c, t, pos: model_lib.decode_step(p, c, t, pos, cfg))
+            lambda p, c, t, pos, act: model_lib.decode_step(
+                p, c, t, pos, cfg, active=act))
 
     # -------------------------------------------------------- lifecycle ----
 
@@ -63,54 +94,123 @@ class ServingEngine:
         self.queue.append(req)
 
     def _admit(self) -> None:
-        for slot in range(self.max_batch):
-            if self.slot_req[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                self._prefill(slot, req)
+        free = [s for s in range(self.max_batch) if self.slot_req[s] is None]
+        if not free or not self.queue:
+            return
+        if not self.batch_prefill:
+            for slot in free:
+                if not self.queue:
+                    break
+                self._prefill_single(slot, self.queue.popleft())
+            return
+        wave: list[Request] = []
+        while self.queue and len(wave) < len(free):
+            wave.append(self.queue.popleft())
+        self._prefill_batch(free[: len(wave)], wave)
 
-    def _prefill(self, slot: int, req: Request) -> None:
-        """One AnchorAttention prefill pass produces BOTH the first-token
-        logits and the populated KV/state cache; the cache is spliced into
-        the engine's batch slot (no redundant per-token replay)."""
+    # ------------------------------------------------- batched prefill ----
+
+    def _padded_len(self, n_max: int) -> tuple[int, str]:
+        """(padded length, algorithm) for a prefill wave of max length
+        ``n_max``.
+
+        Anchor runs at ``AnchorConfig.prefill_pad_len(n_max)``; if that
+        exceeds the engine's cache, fall back to dense — and count it, so
+        the degradation is observable.
+        """
+        if self.spec.algorithm != "anchor":
+            return n_max, "dense"
+        n_pad = self.spec.anchor.prefill_pad_len(n_max)
+        if n_pad > self.max_len:
+            return n_max, "dense"
+        return n_pad, "anchor"
+
+    def _prefill_batch(self, slots: list[int], reqs: list[Request]) -> None:
+        """ONE right-padded batched prefill for a whole admission wave.
+
+        Each request's cache is spliced into its slot; first-token logits
+        are read at each sequence's own last valid position.
+        """
+        lens = [len(r.prompt) for r in reqs]
+        n_pad, algorithm = self._padded_len(max(lens))
+        if algorithm == "dense" and self.spec.algorithm == "anchor":
+            self.stats["dense_fallbacks"] += len(reqs)
+        spec = self.spec.with_algorithm(algorithm).padded()
+        toks = np.zeros((len(reqs), n_pad), np.int32)
+        for j, req in enumerate(reqs):
+            toks[j, : lens[j]] = req.prompt
+        lengths = jnp.asarray(lens, jnp.int32)
+        logits, pcache = model_lib.prefill(
+            self.params, jnp.asarray(toks), self.cfg,
+            spec=spec, lengths=lengths)
+        self.stats["prefill_requests"] += len(reqs)
+        if len(reqs) > 1:
+            self.stats["batched_prefills"] += 1
+        self.stats["padded_tokens"] += len(reqs) * n_pad - sum(lens)
+        first_toks = np.asarray(jnp.argmax(logits, axis=-1))  # one sync
+        self.cache = self._insert_cache(
+            self.cache, pcache, jnp.asarray(slots, jnp.int32))
+        for j, (slot, req) in enumerate(zip(slots, reqs)):
+            req.generated.append(int(first_toks[j]))
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = lens[j]
+
+    # ------------------------------------------------- single prefill ----
+
+    def _prefill_single(self, slot: int, req: Request) -> None:
+        """One unpadded single-request prefill pass (recurrent-state archs).
+
+        Produces BOTH the first-token logits and the populated KV/state
+        cache; the cache is spliced into the engine's batch slot (no
+        redundant per-token replay)."""
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]
         n = prompt.shape[1]
         logits, pcache = model_lib.prefill(
-            self.params, prompt, self.cfg,
-            attn_impl=self._prefill_impl(n),
-            anchor_cfg=self.anchor_cfg)
+            self.params, prompt, self.cfg, spec=self._single_spec(n))
         first_tok = int(jnp.argmax(logits[0]))
-        self.cache = self._insert_cache(self.cache, pcache, slot)
+        self.cache = self._insert_cache(
+            self.cache, pcache, jnp.asarray([slot], jnp.int32))
         req.generated.append(first_tok)
         self.slot_req[slot] = req
         self.slot_pos[slot] = n
+        self.stats["prefill_requests"] += 1
+
+    def _single_spec(self, n: int) -> AttentionSpec:
+        cfg = self.spec.anchor
+        need = cfg.block_q * cfg.step
+        if (self.spec.algorithm == "anchor"
+                and n % need == 0 and n >= 2 * need):
+            return self.spec
+        if self.spec.algorithm == "anchor":
+            self.stats["dense_fallbacks"] += 1
+        return self.spec.with_algorithm("dense")
 
     @staticmethod
     @jax.jit
-    def _insert_cache(pool, pre, slot):
-        """Splice a single-sequence prefill cache into batch slot ``slot``.
+    def _insert_cache(pool, pre, slots):
+        """Splice a whole prefill wave into the pool in ONE jitted call:
+        wave sequence ``j`` of ``pre`` goes into batch slot ``slots[j]``.
 
         Every cache leaf has batch at axis 1 and prefix-aligned content
         (KV/latent caches fill positions [0, n); mamba states are full) —
-        so: take a zeroed one-slot slice, paste ``pre`` at the origin, and
-        write it back at the slot index.
+        per wave entry: take its sequence of ``pre``, paste it at the
+        origin of a zeroed one-slot slice of the pool, and write that
+        back at the slot index.
         """
 
         def one(pool_leaf, pre_leaf):
-            upd = jnp.zeros_like(
-                jax.lax.dynamic_slice_in_dim(pool_leaf, 0, 1, axis=1))
-            upd = jax.lax.dynamic_update_slice(
-                upd, pre_leaf.astype(upd.dtype), (0,) * pre_leaf.ndim)
-            return jax.lax.dynamic_update_slice_in_dim(
-                pool_leaf, upd, slot, axis=1)
+            def body(j, lp):
+                seq = jax.lax.dynamic_slice_in_dim(pre_leaf, j, 1, axis=1)
+                upd = jnp.zeros_like(
+                    jax.lax.dynamic_slice_in_dim(lp, 0, 1, axis=1))
+                upd = jax.lax.dynamic_update_slice(
+                    upd, seq.astype(upd.dtype), (0,) * seq.ndim)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    lp, upd, slots[j], axis=1)
+
+            return jax.lax.fori_loop(0, slots.shape[0], body, pool_leaf)
 
         return jax.tree.map(one, pool, pre)
-
-    def _prefill_impl(self, n: int) -> str:
-        cfg = self.anchor_cfg or AnchorConfig()
-        need = cfg.block_q * cfg.step
-        if self.attn_impl in ("anchor", "pallas") and n % need == 0 and n >= 2 * need:
-            return self.attn_impl
-        return "dense"  # short prompts: sparse prefill has no benefit
 
     # ------------------------------------------------------------- step ----
 
@@ -129,10 +229,17 @@ class ServingEngine:
             by_pos.setdefault(int(self.slot_pos[s]), []).append(s)
         for pos, slots in by_pos.items():
             toks = np.zeros(self.max_batch, np.int32)
+            act = np.zeros(self.max_batch, bool)
             for s in slots:
                 toks[s] = self.slot_req[s].generated[-1]
+                act[s] = True
+            # `act` restricts cache/state writes to this position group —
+            # without it the write at `pos` would corrupt slots whose own
+            # position is past it (mixed-position batches are the norm
+            # with ragged batched prefill).
             logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos))
+                self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+                jnp.asarray(act))
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
             for s in slots:
                 req = self.slot_req[s]

@@ -10,7 +10,6 @@ import sys
 import textwrap
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import abstract_mesh

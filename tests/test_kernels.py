@@ -7,13 +7,17 @@ import pytest
 
 from repro.core import AnchorConfig
 from repro.kernels import (
-    anchor_attention_pallas,
-    anchor_phase_pallas,
+    anchor_attention,
+    anchor_phase,
     flash_attention,
     pack_stripe_indices,
     ssd_chunked,
-    stripe_select_pallas,
+    stripe_select,
 )
+
+# The *_pallas aliases are deprecated; these tests exercise the exact
+# kernel code paths through the dispatched names on the interpret backend.
+PALLAS = "pallas_interpret"
 from repro.kernels.ref import (
     anchor_attention_ref,
     anchor_phase_ref,
@@ -67,7 +71,7 @@ ANCHOR_CASES = [
 def test_anchor_pipeline(b, hq, hkv, n, d, blk, step, theta, dtype):
     cfg = AnchorConfig(block_q=blk, block_kv=blk, step=step, theta=theta)
     q, k, v = _qkv(1, b, hq, hkv, n, d, dtype)
-    out = anchor_attention_pallas(q, k, v, cfg, block_c=blk)
+    out = anchor_attention(q, k, v, cfg, block_c=blk, backend=PALLAS)
     kr, vr = jnp.repeat(k, hq // hkv, 1), jnp.repeat(v, hq // hkv, 1)
     ref = jax.vmap(jax.vmap(lambda a, b_, c: anchor_attention_ref(a, b_, c, cfg)))(
         q, kr, vr)
@@ -78,7 +82,7 @@ def test_anchor_pipeline(b, hq, hkv, n, d, blk, step, theta, dtype):
 def test_anchor_phase_kernel():
     cfg = AnchorConfig(block_q=32, block_kv=32, step=4, theta=2.0)
     q, k, v = _qkv(2, 1, 2, 2, 256, 32, jnp.float32)
-    m, l, acc = anchor_phase_pallas(q, k, v, cfg)
+    m, l, acc = anchor_phase(q, k, v, cfg, backend=PALLAS)
     for h in range(2):
         mr, lr, ar = anchor_phase_ref(q[0, h], k[0, h], v[0, h], cfg)
         np.testing.assert_allclose(np.asarray(m[0, h]), np.asarray(mr), atol=1e-5)
@@ -89,11 +93,11 @@ def test_anchor_phase_kernel():
 def test_stripe_select_kernel():
     cfg = AnchorConfig(block_q=32, block_kv=32, step=4, theta=2.0)
     q, k, v = _qkv(3, 1, 1, 1, 256, 32, jnp.float32)
-    m, _, _ = anchor_phase_pallas(q, k, v, cfg)
+    m, _, _ = anchor_phase(q, k, v, cfg, backend=PALLAS)
     t_m = 256 // 32
     q_mean = jnp.mean(q.reshape(1, 1, t_m, 32, 32), axis=3)
     m_bar = jnp.mean(m.reshape(1, 1, t_m, 32), axis=3)
-    hit = stripe_select_pallas(q_mean, m_bar, k, cfg)
+    hit = stripe_select(q_mean, m_bar, k, cfg, backend=PALLAS)
     ref = stripe_mask_ref(q[0, 0], k[0, 0], m[0, 0], cfg)
     np.testing.assert_array_equal(
         np.asarray(hit[0, 0]).astype(bool), np.asarray(ref))

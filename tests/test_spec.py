@@ -1,0 +1,285 @@
+"""AttentionSpec API: validation, legacy-string shim, canonical entry
+point, varlen masking semantics, and the batched padded serving engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.configs import get_reduced_config
+from repro.core import AnchorConfig, AttentionSpec, spec_from_attn_impl
+from repro.core.spec import resolve_attention_spec
+from repro.kernels import ops as kernel_ops
+from repro.models import model as model_lib
+from repro.serving import Request, ServingEngine
+
+ANCHOR16 = AnchorConfig(block_q=16, block_kv=16, step=2, theta=3.0)
+
+
+def _qkv(seed, b, h, n, d):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (b, h, n, d)),
+            jax.random.normal(ks[1], (b, h, n, d)),
+            jax.random.normal(ks[2], (b, h, n, d)))
+
+
+class TestAttentionSpec:
+    def test_defaults(self):
+        spec = AttentionSpec()
+        assert spec.algorithm == "dense"
+        assert spec.backend is None
+        assert spec.masking == "causal"
+        assert spec.anchor == AnchorConfig()
+
+    def test_invalid_algorithm(self):
+        with pytest.raises(ValueError, match="unknown algorithm"):
+            AttentionSpec(algorithm="sparse")
+
+    def test_invalid_masking(self):
+        with pytest.raises(ValueError, match="unknown masking"):
+            AttentionSpec(masking="sliding")
+
+    def test_invalid_backend(self):
+        with pytest.raises(ValueError, match="unknown backend"):
+            AttentionSpec(backend="triton")
+
+    def test_hashable_jit_static(self):
+        assert hash(AttentionSpec()) == hash(AttentionSpec())
+        assert AttentionSpec().padded().masking == "padded"
+        assert AttentionSpec().with_algorithm("anchor").algorithm == "anchor"
+
+    def test_anchor_config_validation_capacity(self):
+        with pytest.raises(ValueError, match="capacity must be None or a "
+                                             "positive int"):
+            AnchorConfig(capacity=0)
+        with pytest.raises(ValueError, match="capacity"):
+            AnchorConfig(capacity=-4)
+        AnchorConfig(capacity=None)
+        AnchorConfig(capacity=1)
+
+    def test_anchor_config_validation_theta(self):
+        with pytest.raises(ValueError, match="theta must be finite"):
+            AnchorConfig(theta=float("inf"))
+        with pytest.raises(ValueError, match="theta must be finite"):
+            AnchorConfig(theta=float("nan"))
+        AnchorConfig(theta=1e9)
+
+
+class TestLegacyShim:
+    @pytest.mark.parametrize("impl,algorithm,backend", [
+        ("dense", "dense", "xla"),
+        ("anchor", "anchor", "xla"),
+        ("pallas", "anchor", None),
+        ("pallas_flash", "dense", None),
+    ])
+    def test_mapping(self, impl, algorithm, backend):
+        with pytest.warns(DeprecationWarning, match="attn_impl"):
+            spec = spec_from_attn_impl(impl)
+        assert spec.algorithm == algorithm
+        assert spec.backend == backend
+
+    def test_pallas_honors_anchor_backend(self):
+        cfg = AnchorConfig(backend="pallas_interpret")
+        spec = spec_from_attn_impl("pallas", cfg, warn=False)
+        assert spec.backend == "pallas_interpret"
+        assert spec.anchor is cfg
+
+    def test_unknown_impl(self):
+        with pytest.raises(ValueError, match="unknown attn_impl"):
+            spec_from_attn_impl("flash3", warn=False)
+
+    def test_resolve_rejects_both_styles(self):
+        with pytest.raises(TypeError, match="not both"):
+            resolve_attention_spec(AttentionSpec(), attn_impl="dense")
+
+    def test_model_forward_attn_impl_warns_but_works(self):
+        cfg = get_reduced_config("internlm2_1p8b")
+        params = model_lib.init(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0,
+                                  cfg.vocab_size)
+        with pytest.warns(DeprecationWarning, match="attn_impl"):
+            legacy, _ = model_lib.forward(params, toks, cfg,
+                                          attn_impl="dense", remat=False)
+        new, _ = model_lib.forward(
+            params, toks, cfg,
+            spec=AttentionSpec(algorithm="dense", backend="xla"), remat=False)
+        np.testing.assert_array_equal(np.asarray(legacy), np.asarray(new))
+
+    def test_model_prefill_attn_impl_warns_but_works(self):
+        cfg = get_reduced_config("internlm2_1p8b")
+        params = model_lib.init(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0,
+                                  cfg.vocab_size)
+        with pytest.warns(DeprecationWarning, match="attn_impl"):
+            legacy, _ = model_lib.prefill(params, toks, cfg,
+                                          attn_impl="anchor",
+                                          anchor_cfg=ANCHOR16)
+        new, _ = model_lib.prefill(
+            params, toks, cfg,
+            spec=AttentionSpec(algorithm="anchor", backend="xla",
+                               anchor=ANCHOR16))
+        np.testing.assert_array_equal(np.asarray(legacy), np.asarray(new))
+
+    @pytest.mark.parametrize("alias,args", [
+        ("anchor_phase_pallas", 3),
+        ("stripe_select_pallas", None),
+        ("anchor_attention_pallas", 3),
+    ])
+    def test_pallas_aliases_warn(self, alias, args):
+        q, k, v = _qkv(0, 1, 1, 32, 8)
+        cfg = AnchorConfig(block_q=8, block_kv=8, step=2, theta=2.0)
+        fn = getattr(kernel_ops, alias)
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            if alias == "stripe_select_pallas":
+                q_mean = jnp.mean(q.reshape(1, 1, 4, 8, 8), axis=3)
+                m_bar = jnp.zeros((1, 1, 4))
+                fn(q_mean, m_bar, k, cfg)
+            else:
+                fn(q, k, v, cfg)
+
+    def test_sparse_attention_pallas_alias_warns(self):
+        cfg = AnchorConfig(block_q=8, block_kv=8, step=2, theta=1e9)
+        b, h, n, d, cap = 1, 1, 32, 8, 8
+        t_s = cfg.num_superblocks(n)
+        ks = jax.random.split(jax.random.PRNGKey(4), 7)
+        q = jax.random.normal(ks[0], (b, h, n, d))
+        k_sel = jax.random.normal(ks[1], (b, h, t_s, cap, d))
+        v_sel = jax.random.normal(ks[2], (b, h, t_s, cap, d))
+        valid = jnp.ones((b, h, t_s, cap), jnp.int32)
+        m0 = jax.random.normal(ks[4], (b, h, n))
+        l0 = jnp.ones((b, h, n))
+        acc0 = jax.random.normal(ks[6], (b, h, n, d))
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            kernel_ops.sparse_attention_pallas(
+                q, k_sel, v_sel, valid, m0, l0, acc0, cfg, block_c=8)
+
+
+class TestCanonicalEntryPoint:
+    def test_repro_attention_is_exposed(self):
+        assert repro.attention is kernel_ops.attention
+        assert repro.AttentionSpec is AttentionSpec
+
+    def test_dense_matches_flash(self):
+        q, k, v = _qkv(1, 2, 2, 64, 16)
+        out = repro.attention(
+            q, k, v, AttentionSpec(algorithm="dense", backend="xla"))
+        ref = kernel_ops.flash_attention(q, k, v, backend="xla")
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_anchor_matches_anchor(self):
+        q, k, v = _qkv(2, 1, 2, 64, 16)
+        spec = AttentionSpec(algorithm="anchor", backend="xla",
+                             anchor=ANCHOR16)
+        out = repro.attention(q, k, v, spec)
+        ref = kernel_ops.anchor_attention(q, k, v, ANCHOR16, backend="xla")
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_lengths_requires_padded_masking(self):
+        q, k, v = _qkv(3, 2, 1, 32, 8)
+        lengths = jnp.array([16, 32], jnp.int32)
+        with pytest.raises(ValueError, match="padded"):
+            repro.attention(q, k, v, AttentionSpec(), lengths=lengths)
+        with pytest.raises(ValueError, match="requires a lengths"):
+            repro.attention(q, k, v, AttentionSpec(masking="padded"))
+
+    def test_padded_rows_are_zero_and_keys_never_selected(self):
+        q, k, v = _qkv(4, 2, 1, 64, 16)
+        lengths = jnp.array([39, 64], jnp.int32)
+        spec = AttentionSpec(algorithm="anchor", backend="xla",
+                             anchor=ANCHOR16, masking="padded")
+        out = repro.attention(q, k, v, spec, lengths=lengths)
+        assert np.allclose(np.asarray(out[0, :, 39:]), 0.0)
+        assert np.isfinite(np.asarray(out)).all()
+        # Padding keys are never stripe-selected.
+        hit = kernel_ops.stripe_select(
+            jnp.mean(q.reshape(2, 1, 4, 16, 16), axis=3),
+            jnp.zeros((2, 1, 4)), k, ANCHOR16, lengths=lengths,
+            backend="xla")
+        assert int(np.asarray(hit[0, :, :, 39:]).sum()) == 0
+
+
+class TestServingEngineVarlen:
+    """Acceptance: ragged prompts run batched sparse prefill with zero
+    dense fallbacks and reproduce the seed engine's one-at-a-time
+    dense-fallback tokens on the xla backend."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        cfg = get_reduced_config("internlm2_1p8b")
+        params = model_lib.init(jax.random.PRNGKey(0), cfg)
+        anchor = AnchorConfig(block_q=16, block_kv=16, step=2, theta=1e9)
+        spec = AttentionSpec(algorithm="anchor", backend="xla", anchor=anchor)
+        rng = np.random.default_rng(0)
+        # need = block_q*step = 32; lengths deliberately NOT multiples.
+        prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+                   for n in (33, 47, 50)]
+        return cfg, params, spec, prompts
+
+    @staticmethod
+    def _run(engine, prompts):
+        for uid, p in enumerate(prompts):
+            engine.submit(Request(uid=uid, prompt=p.copy(), max_new_tokens=5))
+        done = engine.run_to_completion()
+        return {r.uid: r.generated for r in done}
+
+    def test_batched_sparse_prefill_no_fallbacks(self, setup):
+        cfg, params, spec, prompts = setup
+        engine = ServingEngine(params, cfg, max_batch=4, max_len=128,
+                               spec=spec)
+        gen = self._run(engine, prompts)
+        assert engine.stats["dense_fallbacks"] == 0
+        assert engine.stats["batched_prefills"] == 1
+        assert engine.stats["prefill_requests"] == len(prompts)
+        assert engine.stats["padded_tokens"] > 0
+
+        # Seed-equivalent reference: one-at-a-time, dense fallback for
+        # every non-block-aligned prompt.
+        ref = ServingEngine(params, cfg, max_batch=4, max_len=128,
+                            spec=spec, batch_prefill=False)
+        gen_ref = self._run(ref, prompts)
+        assert ref.stats["dense_fallbacks"] == len(prompts)
+        assert gen == gen_ref
+
+    def test_mixed_position_decode_matches_isolated_generation(self, setup):
+        """Ground truth: a ragged batch must generate exactly what each
+        request generates when served ALONE.  Catches cross-slot cache
+        corruption from position-grouped decode (the batch writes K/V at
+        one group's position into every slot unless masked)."""
+        cfg, params, spec, prompts = setup
+        engine = ServingEngine(params, cfg, max_batch=4, max_len=128,
+                               spec=spec)
+        gen = self._run(engine, prompts)
+        for uid, prompt in enumerate(prompts):
+            solo = ServingEngine(params, cfg, max_batch=1, max_len=128,
+                                 spec=spec)
+            gen_solo = self._run(solo, [prompt])
+            assert gen[uid] == gen_solo[0], (uid, gen[uid], gen_solo[0])
+
+    def test_queue_is_a_deque(self, setup):
+        import collections
+
+        cfg, params, spec, _ = setup
+        engine = ServingEngine(params, cfg, max_batch=2, max_len=64,
+                               spec=spec)
+        assert isinstance(engine.queue, collections.deque)
+
+    def test_engine_legacy_kwargs_warn(self, setup):
+        cfg, params, _, _ = setup
+        with pytest.warns(DeprecationWarning):
+            engine = ServingEngine(params, cfg, max_batch=2, max_len=64,
+                                   attn_impl="anchor", anchor_cfg=ANCHOR16)
+        assert engine.spec.algorithm == "anchor"
+        assert engine.spec.anchor is ANCHOR16
+
+    def test_aligned_prompts_also_batch(self, setup):
+        """Block-aligned prompts keep working through the batched path."""
+        cfg, params, spec, _ = setup
+        rng = np.random.default_rng(1)
+        prompts = [rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+                   for _ in range(2)]
+        engine = ServingEngine(params, cfg, max_batch=2, max_len=128,
+                               spec=spec)
+        gen = self._run(engine, prompts)
+        assert engine.stats["dense_fallbacks"] == 0
+        assert all(len(v) == 5 for v in gen.values())

@@ -5,13 +5,12 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_reduced_config
-from repro.data import DataConfig, ZipfLM, make_pipeline
+from repro.data import DataConfig, ZipfLM
 from repro.models import model as model_lib
-from repro.optim import AdamWConfig, adamw
+from repro.optim import AdamWConfig
 from repro.optim import apply_updates, init as adamw_init
 from repro.serving import Request, ServingEngine
 from repro.core.config import AnchorConfig
