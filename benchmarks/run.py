@@ -25,6 +25,7 @@ SUITES = [
     "latency",  # Fig. 2 / 6b / 6c
     "ruler_proxy",  # Table 3 proxy
     "roofline_report",  # §Dry-run / §Roofline
+    "serving_throughput",  # dense-slab vs paged KV-cache engine
 ]
 
 

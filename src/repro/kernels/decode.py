@@ -48,8 +48,11 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, ms_ref, ls_ref,
     p = jnp.where(valid, p, 0.0)
     alpha = jnp.exp(m_prev - m_new)
     ls_ref[...] = ls_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    # Zero masked V rows too: a grid padded with a partial tail block reads
+    # garbage (possibly NaN) beyond s_len, and 0 * NaN would poison acc.
+    v = jnp.where(valid[0][:, None], v_ref[0].astype(jnp.float32), 0.0)
     acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        p, v, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
     ms_ref[...] = m_new
 
@@ -76,7 +79,12 @@ def flash_decode(
     b, hq, _, d = q.shape
     hkv, s_len = k_cache.shape[1], k_cache.shape[2]
     group = hq // hkv
-    assert s_len % block_s == 0, (s_len, block_s)
+    # Any cache length works: clamp the tile to the cache, then pad the
+    # grid with a (masked) tail block when block_s does not divide s_len.
+    # Tail-block columns land at >= s_len >= cache_len, so the existing
+    # `col < cache_len` mask already zeroes their contribution.
+    block_s = max(1, min(block_s, s_len))
+    num_s_blocks = -(-s_len // block_s)
     scale = 1.0 / (d ** 0.5)
 
     qf = q.reshape(b * hq, 1, d)
@@ -90,7 +98,7 @@ def flash_decode(
     kernel = functools.partial(_decode_kernel, block_s=block_s, scale=scale)
     out = pl.pallas_call(
         kernel,
-        grid=(b * hq, s_len // block_s),
+        grid=(b * hq, num_s_blocks),
         in_specs=[
             pl.BlockSpec((1, 1), lambda bh, j: (0, 0)),
             pl.BlockSpec((1, 1, d), lambda bh, j: (bh, 0, 0)),
@@ -115,3 +123,119 @@ dispatch.register("flash_decode", "pallas_interpret")(
     functools.partial(flash_decode, interpret=True))
 dispatch.register("flash_decode", "pallas_tpu")(
     functools.partial(flash_decode, interpret=False))
+
+
+# ------------------------------------------------------ paged flash decode ----
+
+
+def _paged_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         ms_ref, ls_ref, acc_ref, *, page_size, scale):
+    del pt_ref  # consumed by the BlockSpec index maps
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        ms_ref[...] = jnp.full_like(ms_ref, _NEG_INF)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (1, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (page_size, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (1, page_size)
+    # Logical column of each lane: the page table maps logical page j onto
+    # an arbitrary physical page, but the *positions* it holds are always
+    # [j*page_size, (j+1)*page_size) — trash/unassigned pages sit at
+    # logical positions >= cache_len and are masked out here.
+    col = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = col < len_ref[0]
+    s = jnp.where(valid, s, _NEG_INF)
+    m_prev = ms_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    ls_ref[...] = ls_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    ms_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(ls_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_decode(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    page_tables: jnp.ndarray,
+    cache_len: jnp.ndarray,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One-token decode attention over a *paged* KV cache.
+
+    The page-table indirection lives in the BlockSpec index map: logical
+    KV tile ``j`` of batch row ``b`` is DMA'd from physical page
+    ``page_tables[b, j]`` of the shared pool — the serving-side twin of
+    the paper's discrete KV position loading (the kernel streams scattered
+    pages exactly like the sparse path streams scattered stripes).
+    ``page_tables`` arrives via scalar prefetch so the indices are on-core
+    before the grid body runs.
+
+    q: (B, Hq, 1, D); pages: (P, Hkv, page_size, D);
+    page_tables: (B, n_pages) int32 physical page ids (0 = null page);
+    cache_len: () int32.  Returns (B, Hq, 1, D).
+    """
+    b, hq, _, d = q.shape
+    hkv, page_size = k_pages.shape[1], k_pages.shape[2]
+    group = hq // hkv
+    n_pages = page_tables.shape[1]
+    scale = 1.0 / (d ** 0.5)
+
+    qf = q.reshape(b * hq, 1, d)
+    pt = page_tables.astype(jnp.int32)
+    len_arr = jnp.full((1,), cache_len, jnp.int32)
+
+    def q_index(bh, j, pt_ref, len_ref):
+        return bh, 0, 0
+
+    def kv_index(bh, j, pt_ref, len_ref):
+        return pt_ref[bh // hq, j], (bh % hq) // group, 0, 0
+
+    kernel = functools.partial(
+        _paged_decode_kernel, page_size=page_size, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * hq, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), q_index),
+            pl.BlockSpec((1, 1, page_size, d), kv_index),
+            pl.BlockSpec((1, 1, page_size, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hq, 1, d), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(pt, len_arr, qf, k_pages, v_pages)
+    return out.reshape(b, hq, 1, d)
+
+
+dispatch.register("paged_flash_decode", "pallas_interpret")(
+    functools.partial(paged_flash_decode, interpret=True))
+dispatch.register("paged_flash_decode", "pallas_tpu")(
+    functools.partial(paged_flash_decode, interpret=False))

@@ -48,6 +48,7 @@ __all__ = [
     "attention",
     "flash_attention",
     "flash_decode",
+    "paged_flash_decode",
     "anchor_phase",
     "stripe_select",
     "sparse_attention",
@@ -148,6 +149,26 @@ def flash_decode(
     fn, _ = dispatch.lookup("flash_decode", backend)
     kw = {} if block_s is None else {"block_s": block_s}
     return fn(q, k_cache, v_cache, cache_len, **kw)
+
+
+def paged_flash_decode(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    page_tables: jnp.ndarray,
+    cache_len: jnp.ndarray,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """One-token decode attention over a paged KV cache.
+
+    q: (B, Hq, 1, D); pages: (P, Hkv, page_size, D) — the shared pool;
+    page_tables: (B, n_pages) int32 physical page ids (0 = null page);
+    cache_len: () int32 valid positions.  Logical position ``t`` of batch
+    row ``b`` lives at ``pages[page_tables[b, t // page_size], :,
+    t % page_size]``.  Returns (B, Hq, 1, D).
+    """
+    fn, _ = dispatch.lookup("paged_flash_decode", backend)
+    return fn(q, k_pages, v_pages, page_tables, cache_len)
 
 
 def anchor_phase(

@@ -63,6 +63,30 @@ def flash_decode_xla(
     return decode_attention(q, k_cache, v_cache, cache_len)
 
 
+@dispatch.register("paged_flash_decode", "xla")
+def paged_flash_decode_xla(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    page_tables: jnp.ndarray,
+    cache_len: jnp.ndarray,
+) -> jnp.ndarray:
+    """One-token decode over a paged KV cache — gather-based XLA path.
+
+    Materializes each sequence's logical cache view by gathering its pages
+    from the shared pool (``(B, n_pages)`` page table -> ``(B, Hkv,
+    n_pages*page_size, D)`` view), then runs the standard masked decode
+    attention.  Positions >= ``cache_len`` (padding tail of the last page,
+    trash/unassigned pages) are masked exactly like a dense slab's unused
+    tail, so paged and dense decode are bit-identical on this backend.
+    """
+    from repro.models.cache import gather_pages
+
+    return dispatch.lookup("flash_decode", "xla")[0](
+        q, gather_pages(k_pages, page_tables),
+        gather_pages(v_pages, page_tables), cache_len)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def anchor_phase_xla(
     q: jnp.ndarray,

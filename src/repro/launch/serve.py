@@ -3,11 +3,17 @@
 CPU example (reduced config, AnchorAttention prefill):
     PYTHONPATH=src python -m repro.launch.serve --arch yi_9b --reduced \
         --requests 6 --prompt-len 64 --max-new 8
+
+Paged KV-cache serving (shared pool + prefix sharing + chunked prefill):
+    PYTHONPATH=src python -m repro.launch.serve --arch yi_9b --reduced \
+        --requests 6 --prompt-len 64 --max-new 8 \
+        --paged --page-size 16 --shared-prefix 32 --chunk-tokens 64
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -33,6 +39,22 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default=None, choices=dispatch.BACKENDS,
                     help="kernel backend (default: platform-appropriate)")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged KV-cache pool instead of the "
+                         "dense (max_batch, max_len) slab")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="pool budget (default: dense-equivalent footprint)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable prompt-prefix page sharing")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="chunked-prefill threshold/chunk size (paged only)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of a common system prompt prepended to "
+                         "every request (exercises prefix sharing)")
+    ap.add_argument("--stats-every", type=int, default=0,
+                    help="print an engine.stats snapshot every N engine "
+                         "steps (0: only the final snapshot)")
     args = ap.parse_args()
     if args.backend:
         dispatch.set_default_backend(args.backend)
@@ -56,15 +78,36 @@ def main() -> None:
     # Cache must fit prompts padded for sparse prefill or the engine
     # records a dense fallback.
     max_len = anchor_cfg.prefill_pad_len(args.prompt_len) + args.max_new + 8
+    paged_kw = {}
+    if args.paged:
+        max_len = -(-max_len // args.page_size) * args.page_size
+        paged_kw = dict(
+            cache_layout="paged",
+            page_size=args.page_size,
+            num_pages=args.num_pages,
+            prefix_sharing=not args.no_prefix_cache,
+            chunk_tokens=args.chunk_tokens,
+        )
     engine = ServingEngine(
-        params, cfg, max_batch=args.max_batch, max_len=max_len, spec=spec)
+        params, cfg, max_batch=args.max_batch, max_len=max_len, spec=spec,
+        **paged_kw)
 
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(0, cfg.vocab_size,
+                          size=args.shared_prefix).astype(np.int32)
     t0 = time.time()
     for uid in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len).astype(np.int32)
+        own = max(1, args.prompt_len - args.shared_prefix)
+        prompt = np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size, size=own).astype(np.int32)])
         engine.submit(Request(uid=uid, prompt=prompt, max_new_tokens=args.max_new))
-    done = engine.run_to_completion()
+    done: list[Request] = []
+    for it in range(10_000):
+        done.extend(engine.step())
+        if args.stats_every and (it + 1) % args.stats_every == 0:
+            print(f"stats[iter {it + 1}]: {json.dumps(engine.snapshot())}")
+        if engine.idle:
+            break
     dt = time.time() - t0
     for req in sorted(done, key=lambda r: r.uid):
         print(f"req {req.uid}: generated {len(req.generated)} tokens: "
@@ -72,7 +115,7 @@ def main() -> None:
     total_tokens = sum(len(r.generated) for r in done)
     print(f"{len(done)} requests, {total_tokens} tokens in {dt:.1f}s "
           f"({total_tokens / max(dt, 1e-9):.1f} tok/s CPU)")
-    print(f"engine stats: {engine.stats}")
+    print(f"engine stats: {json.dumps(engine.snapshot())}")
 
 
 if __name__ == "__main__":

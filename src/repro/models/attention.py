@@ -23,9 +23,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.spec import AttentionSpec
+from repro.models.cache import NULL_PAGE, PagedKVLayout
 from repro.models.config import ModelConfig
 from repro.models.layers import (
     apply_rope,
+    chunk_attention,
     decode_attention,
     dense_init,
     rmsnorm,
@@ -109,6 +111,28 @@ def gqa_decode(
 ) -> tuple[jnp.ndarray, Params]:
     """One-token decode.  x: (B, 1, d); pos: () int32 current position."""
     b = x.shape[0]
+    q, k, v = _gqa_project_decode(x, p, cfg, pos)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0))
+    out = decode_attention(q, k_cache, v_cache, pos + 1)
+    out = jnp.swapaxes(out, 1, 2).reshape(b, 1, cfg.num_heads * cfg.head_dim)
+    return out @ p["wo"], {"k": k_cache, "v": v_cache}
+
+
+# ----------------------------------------------------------- GQA (paged) ----
+
+
+def gqa_init_paged_cache(cfg: ModelConfig, layout: PagedKVLayout) -> Params:
+    """Per-layer paged KV pool: (total_pages, Hkv, page_size, head_dim)."""
+    dt = jnp.dtype(cfg.dtype)
+    shape = (layout.total_pages, cfg.num_kv_heads, layout.page_size,
+             cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def _gqa_project_decode(x, p, cfg: ModelConfig, pos):
+    """Shared one-token q/k/v projection + rope for the decode paths."""
+    b = x.shape[0]
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = (x @ p["wq"]).reshape(b, 1, h, hd)
     k = (x @ p["wk"]).reshape(b, 1, hkv, hd)
@@ -119,11 +143,82 @@ def gqa_decode(
     posb = jnp.full((b, 1), pos, jnp.int32)
     q = apply_rope(q, posb, cfg.rope_theta)
     k = apply_rope(k, posb, cfg.rope_theta)
+    return tuple(jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+
+
+def gqa_decode_paged(
+    x: jnp.ndarray,
+    p: Params,
+    cache: Params,
+    cfg: ModelConfig,
+    pos: jnp.ndarray,
+    page_tables: jnp.ndarray,
+    active: jnp.ndarray | None = None,
+    kv_backend: str | None = None,
+) -> tuple[jnp.ndarray, Params]:
+    """One-token decode against the shared paged KV pool.
+
+    x: (B, 1, d); cache leaves: (P, Hkv, page_size, hd) — no batch axis,
+    the pool is shared; page_tables: (B, n_pages) int32.  The new token's
+    K/V is scattered into physical page ``page_tables[b, pos //
+    page_size]`` at offset ``pos % page_size``.  ``active=False`` slots
+    (and unassigned table entries) redirect their write to the null page
+    instead of masking — the pool has no batch axis for a ``where``.
+    """
+    b = x.shape[0]
+    q, k, v = _gqa_project_decode(x, p, cfg, pos)  # (B, H*, 1, hd)
+    ps = cache["k"].shape[2]
+    page_idx = jnp.full((b, 1), pos // ps, jnp.int32)
+    pids = jnp.take_along_axis(page_tables, page_idx, axis=1)[:, 0]
+    if active is not None:
+        pids = jnp.where(active, pids, NULL_PAGE)
+    offset = pos % ps
+    k_pages = cache["k"].at[pids, :, offset].set(
+        k[:, :, 0].astype(cache["k"].dtype))
+    v_pages = cache["v"].at[pids, :, offset].set(
+        v[:, :, 0].astype(cache["v"].dtype))
+
+    from repro.kernels import ops as kernel_ops
+
+    out = kernel_ops.paged_flash_decode(
+        q, k_pages, v_pages, page_tables, pos + 1, backend=kv_backend)
+    out = jnp.swapaxes(out, 1, 2).reshape(b, 1, cfg.num_heads * cfg.head_dim)
+    return out @ p["wo"], {"k": k_pages, "v": v_pages}
+
+
+def gqa_chunk_apply(
+    x: jnp.ndarray,
+    p: Params,
+    cache: Params,
+    cfg: ModelConfig,
+    pos: jnp.ndarray,
+) -> tuple[jnp.ndarray, Params]:
+    """Chunked-prefill attention: a C-token chunk against dense cache
+    views that already hold positions ``[0, pos)`` of each sequence.
+
+    x: (B, C, d); cache leaves: (B, Hkv, S, hd) gathered views (see
+    :func:`repro.models.cache.gather_pages`).  Writes the chunk's K/V at
+    ``[pos, pos + C)`` and attends each row to history + its causal
+    prefix of the chunk.
+    """
+    b, c, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, c, h, hd)
+    k = (x @ p["wk"]).reshape(b, c, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, c, hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    positions = jnp.broadcast_to(pos + jnp.arange(c), (b, c))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
     q, k, v = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
-    k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0))
-    v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0))
-    out = decode_attention(q, k_cache, v_cache, pos + 1)
-    out = jnp.swapaxes(out, 1, 2).reshape(b, 1, h * hd)
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0))
+    out = chunk_attention(q, k_cache, v_cache, pos)
+    out = jnp.swapaxes(out, 1, 2).reshape(b, c, h * hd)
     return out @ p["wo"], {"k": k_cache, "v": v_cache}
 
 

@@ -1,0 +1,112 @@
+"""KV-cache layout abstraction: dense slab vs paged pool.
+
+Two physical layouts share one logical cache contract (position ``t`` of
+sequence ``b`` holds that token's K/V):
+
+* **Dense slab** (the default): per-layer ``(B, Hkv, max_len, D)`` —
+  every batch slot carries ``max_len`` positions of HBM whether it uses
+  them or not.  Recurrent-state architectures (mamba / hybrid) and MLA's
+  latent cache always use this layout: their state is either O(1) per
+  sequence or compressed, so paging buys nothing.
+* **Paged pool** (:class:`PagedKVLayout`): per-layer ``(P, Hkv,
+  page_size, D)`` — one shared pool of fixed-size pages, with a
+  per-sequence int32 page table mapping logical page ``j`` to a physical
+  page.  Page 0 is the reserved null/trash page (see
+  :mod:`repro.serving.kv_pool`), so device arrays are sized
+  ``num_pages + 1`` along the page axis and jitted writes by inactive
+  slots can be redirected there without branching.
+
+The layout only changes *where bytes live*; every read is masked by
+``cache_len`` exactly like the dense slab's unused tail, which keeps
+paged and dense decode bit-identical on the xla backend (tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+NULL_PAGE = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVLayout:
+    """Static (jit-relevant) description of a paged KV-cache pool.
+
+    Attributes:
+      page_size: cache positions per page.
+      num_pages: allocatable pages in the shared pool (page 0, the null
+        page, is extra — device arrays carry ``total_pages`` slots).
+      pages_per_seq: page-table width — the per-sequence maximum logical
+        pages, i.e. ``max_len // page_size``.
+    """
+
+    page_size: int
+    num_pages: int
+    pages_per_seq: int
+
+    def __post_init__(self) -> None:
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {self.num_pages}")
+        if self.pages_per_seq < 1:
+            raise ValueError(
+                f"pages_per_seq must be >= 1, got {self.pages_per_seq}")
+
+    @property
+    def total_pages(self) -> int:
+        """Pool slots on device: allocatable pages + the null page."""
+        return self.num_pages + 1
+
+    @property
+    def max_len(self) -> int:
+        """Logical cache positions addressable per sequence."""
+        return self.pages_per_seq * self.page_size
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Whether ``cfg`` can serve from a paged KV pool.
+
+    Paged serving needs every mixer to be a plain (GQA) attention layer:
+    mamba layers carry O(1) recurrent state (nothing to page) and MLA
+    caches a compressed latent stream (a different pool shape — a
+    recorded extension).  Those families keep the dense slab.
+    """
+    return (cfg.has_attention and not cfg.use_mla
+            and all(mixer == "attn" for mixer, _ in cfg.group_layout()))
+
+
+def gather_pages(pages: jnp.ndarray, page_tables: jnp.ndarray) -> jnp.ndarray:
+    """Materialize per-sequence dense cache views from a shared pool.
+
+    pages: (P, Hkv, page_size, D); page_tables: (B, n_pages) int32.
+    Returns (B, Hkv, n_pages * page_size, D) — logical position ``t`` of
+    row ``b`` at index ``t`` (trash-page garbage beyond ``cache_len`` is
+    the caller's to mask, same as a dense slab's tail).
+    """
+    g = jnp.take(pages, page_tables, axis=0)  # (B, NP, Hkv, ps, D)
+    b, n_pages, hkv, ps, d = g.shape
+    return jnp.transpose(g, (0, 2, 1, 3, 4)).reshape(b, hkv, n_pages * ps, d)
+
+
+def scatter_pages(pages: jnp.ndarray, view: jnp.ndarray,
+                  page_tables: jnp.ndarray) -> jnp.ndarray:
+    """Write per-sequence dense views back into the shared pool.
+
+    Inverse of :func:`gather_pages`: ``view`` is (B, Hkv, n_pages*ps, D),
+    ``page_tables`` (B, n_pages).  Table entries that must not be written
+    (shared pages, unassigned slots) should point at the null page —
+    duplicate null indices scatter garbage onto garbage.
+    """
+    b, hkv, s, d = view.shape
+    n_pages = page_tables.shape[1]
+    ps = s // n_pages
+    src = jnp.transpose(
+        view.reshape(b, hkv, n_pages, ps, d), (0, 2, 1, 3, 4))
+    flat_idx = page_tables.reshape(-1)
+    flat_src = src.reshape(b * n_pages, hkv, ps, d).astype(pages.dtype)
+    return pages.at[flat_idx].set(flat_src, mode="drop")

@@ -151,6 +151,40 @@ def blockwise_attention(
     return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
 
 
+def chunk_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,
+) -> jnp.ndarray:
+    """Multi-token chunked-prefill attention over a cache with history.
+
+    Generalizes :func:`decode_attention` from 1 query token to a chunk:
+    query row ``r`` (global position ``pos + r``) attends to cache
+    positions ``[0, pos + r]`` — the already-prefilled history plus the
+    causal part of its own chunk (the caller has written the chunk's K/V
+    into the cache at ``[pos, pos + C)`` before calling).
+
+    q: (B, Hq, C, D); caches: (B, Hkv, S, D); pos: () int32 — positions
+    already in the cache before this chunk.
+    """
+    b, hq, c, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    if hkv != hq:
+        rep = hq // hkv
+        k_cache = jnp.repeat(k_cache, rep, axis=1)
+        v_cache = jnp.repeat(v_cache, rep, axis=1)
+    scale = 1.0 / (d ** 0.5)
+    sc = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    valid = jnp.arange(s)[None, :] <= pos + jnp.arange(c)[:, None]  # (C, S)
+    sc = jnp.where(valid[None, None], sc, _NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def decode_attention(
     q: jnp.ndarray,
     k_cache: jnp.ndarray,

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.core.config import AnchorConfig
 from repro.core.spec import AttentionSpec, resolve_attention_spec
+from repro.models import cache as cache_lib
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.models.layers import rmsnorm, rmsnorm_init
@@ -190,12 +191,18 @@ def decode_step(
     *,
     embed: jnp.ndarray | None = None,
     active: jnp.ndarray | None = None,
+    page_tables: jnp.ndarray | None = None,
+    kv_backend: str | None = None,
 ) -> tuple[jnp.ndarray, Params]:
     """One decode step.  token: (B,) int32 (or embed (B, 1, d)); pos: ().
 
     ``active`` (optional, (B,) bool) restricts cache/state writes to the
     given batch slots — required when decoding one position group of a
     mixed-position batch (see :func:`transformer.stack_decode`).
+
+    ``page_tables`` ((B, n_pages) int32, optional) decodes against a
+    paged cache (``init_cache(..., layout=PagedKVLayout(...))``);
+    ``kv_backend`` selects the ``paged_flash_decode`` backend.
 
     Returns (logits (B, V), new_cache).
     """
@@ -205,13 +212,44 @@ def decode_step(
     else:
         x = jnp.take(params["embed"], token[:, None], axis=0)
     x, new_cache = transformer.stack_decode(
-        x, params["blocks"], cache, cfg, pos, active=active)
+        x, params["blocks"], cache, cfg, pos, active=active,
+        page_tables=page_tables, kv_backend=kv_backend)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     return _logits(x, params)[:, 0], new_cache
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
-    return transformer.stack_cache_init(cfg, batch, max_len)
+def prefill_chunk(
+    params: Params,
+    tokens: jnp.ndarray,
+    cache: Params,
+    cfg: ModelConfig,
+    pos: jnp.ndarray,
+) -> tuple[jnp.ndarray, Params]:
+    """One chunk of a chunked prefill.  tokens: (B, C) int32; ``cache``
+    holds dense per-sequence views already containing ``[0, pos)``.
+
+    Returns (logits (B, C, V) — the caller reads the row of its last
+    valid chunk token — and the updated cache views with the chunk's K/V
+    written at ``[pos, pos + C)``).  GQA-attention-only; see
+    :func:`transformer.stack_chunk_prefill`.
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x, new_cache = transformer.stack_chunk_prefill(
+        x, params["blocks"], cache, cfg, pos)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(x, params), new_cache
+
+
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    layout: "cache_lib.PagedKVLayout | None" = None,
+) -> Params:
+    """Decode cache.  Default: dense per-slot slabs.  With ``layout`` (a
+    :class:`repro.models.cache.PagedKVLayout`): one shared paged KV pool
+    addressed through page tables (GQA attention-only archs)."""
+    return transformer.stack_cache_init(cfg, batch, max_len, layout=layout)
 
 
 def param_count(params: Params) -> int:

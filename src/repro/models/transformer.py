@@ -18,6 +18,7 @@ from jax.ad_checkpoint import checkpoint_name
 
 from repro.core.spec import AttentionSpec
 from repro.models import attention as attn_lib
+from repro.models import cache as cache_lib
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
 from repro.models.config import ModelConfig
@@ -191,22 +192,48 @@ def stack_apply(
 # --------------------------------------------------------------- decode ----
 
 
-def group_cache_init(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+def group_cache_init(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    layout: cache_lib.PagedKVLayout | None = None,
+) -> Params:
     cache: Params = {}
     for i, (mixer, _) in enumerate(cfg.group_layout()):
         if mixer == "attn":
-            cache[f"l{i}"] = (
-                attn_lib.mla_init_cache(cfg, batch, max_len)
-                if cfg.use_mla
-                else attn_lib.gqa_init_cache(cfg, batch, max_len)
-            )
+            if layout is not None:
+                if cfg.use_mla:
+                    raise NotImplementedError(
+                        "paged KV layout is GQA-only; MLA's latent cache "
+                        "keeps the dense slab (see repro.models.cache)")
+                cache[f"l{i}"] = attn_lib.gqa_init_paged_cache(cfg, layout)
+            else:
+                cache[f"l{i}"] = (
+                    attn_lib.mla_init_cache(cfg, batch, max_len)
+                    if cfg.use_mla
+                    else attn_lib.gqa_init_cache(cfg, batch, max_len)
+                )
         else:
+            if layout is not None:
+                raise NotImplementedError(
+                    "paged KV layout requires an attention-only arch; "
+                    "recurrent-state layers keep the dense slab")
             cache[f"l{i}"] = ssm_lib.mamba_init_cache(cfg, batch)
     return cache
 
 
-def stack_cache_init(cfg: ModelConfig, batch: int, max_len: int) -> Params:
-    one = group_cache_init(cfg, batch, max_len)
+def stack_cache_init(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    layout: cache_lib.PagedKVLayout | None = None,
+) -> Params:
+    """Decoder-stack cache.  ``layout=None`` (default): per-slot dense
+    slabs, leaves (G, B, ..., max_len, ...).  With a
+    :class:`repro.models.cache.PagedKVLayout`: one shared paged pool,
+    leaves (G, total_pages, Hkv, page_size, hd) — no batch axis; callers
+    address sequences through int32 page tables."""
+    one = group_cache_init(cfg, batch, max_len, layout=layout)
     return jax.tree.map(
         lambda a: jnp.broadcast_to(a[None], (cfg.num_groups, *a.shape)), one
     )
@@ -219,6 +246,8 @@ def stack_decode(
     cfg: ModelConfig,
     pos: jnp.ndarray,
     active: jnp.ndarray | None = None,
+    page_tables: jnp.ndarray | None = None,
+    kv_backend: str | None = None,
 ) -> tuple[jnp.ndarray, Params]:
     """One-token decode through the stack.  x: (B, 1, d).
 
@@ -227,6 +256,13 @@ def stack_decode(
     mixed-position batch MUST pass it — without it every decoder writes
     K/V (or advances recurrent state) at ``pos`` for ALL slots, corrupting
     the history of slots that are past ``pos``.
+
+    ``page_tables`` ((B, n_pages) int32, optional): decode against a
+    *paged* cache (leaves (G, P, Hkv, page_size, hd); see
+    :mod:`repro.models.cache`).  ``active`` masking then happens inside
+    the paged write (null-page redirection) — the shared pool has no
+    batch axis to ``where`` over.  ``kv_backend`` picks the
+    ``paged_flash_decode`` kernel backend (None = process default).
     """
     layout = cfg.group_layout()
 
@@ -241,16 +277,68 @@ def stack_decode(
             p = gp[f"l{i}"]
             h = rmsnorm(x, p["norm_mixer"], cfg.norm_eps)
             if mixer == "attn":
-                if cfg.use_mla:
-                    dec = (attn_lib.mla_decode_absorbed if cfg.mla_absorb
-                           else attn_lib.mla_decode)
+                if page_tables is not None:
+                    if cfg.use_mla:
+                        raise NotImplementedError(
+                            "paged decode is GQA-only (see repro.models.cache)")
+                    h, nc = attn_lib.gqa_decode_paged(
+                        h, p["attn"], gc[f"l{i}"], cfg, pos, page_tables,
+                        active=active, kv_backend=kv_backend)
                 else:
-                    dec = attn_lib.gqa_decode
-                h, nc = dec(h, p["attn"], gc[f"l{i}"], cfg, pos)
+                    if cfg.use_mla:
+                        dec = (attn_lib.mla_decode_absorbed if cfg.mla_absorb
+                               else attn_lib.mla_decode)
+                    else:
+                        dec = attn_lib.gqa_decode
+                    h, nc = dec(h, p["attn"], gc[f"l{i}"], cfg, pos)
             else:
                 h, nc = ssm_lib.mamba_decode(h, p["mamba"], gc[f"l{i}"], cfg)
-            if active is not None:
+            if active is not None and page_tables is None:
                 nc = jax.tree.map(keep_active, nc, gc[f"l{i}"])
+            new_gc[f"l{i}"] = nc
+            x = x + h
+            if ffn != "none":
+                h = rmsnorm(x, p["norm_ffn"], cfg.norm_eps)
+                if ffn == "moe":
+                    h, _ = moe_lib.moe_apply(h, p["moe"], cfg)
+                else:
+                    h = mlp_apply(h, p["mlp"], cfg.mlp_act)
+                x = x + h
+        return x, new_gc
+
+    x, new_cache = jax.lax.scan(group_fn, x, (stacked, cache))
+    return x, new_cache
+
+
+def stack_chunk_prefill(
+    x: jnp.ndarray,
+    stacked: Params,
+    cache: Params,
+    cfg: ModelConfig,
+    pos: jnp.ndarray,
+) -> tuple[jnp.ndarray, Params]:
+    """Chunked prefill: one C-token chunk through the stack with history.
+
+    x: (B, C, d); ``cache`` holds dense (B, Hkv, S, hd) views that already
+    contain positions ``[0, pos)`` (for a paged engine: gathered from the
+    pool, scattered back after — see :mod:`repro.models.cache`).  Writes
+    the chunk's K/V at ``[pos, pos + C)`` and returns (hidden (B, C, d),
+    updated cache).  Attention-only (GQA) architectures — recurrent-state
+    mixers would need their scan state threaded chunk-to-chunk, and those
+    archs keep the dense one-shot path.
+    """
+    layout = cfg.group_layout()
+    if cfg.use_mla or any(mixer != "attn" for mixer, _ in layout):
+        raise NotImplementedError(
+            "chunked prefill is GQA-attention-only (see repro.models.cache)")
+
+    def group_fn(x, inp):
+        gp, gc = inp
+        new_gc = {}
+        for i, (mixer, ffn) in enumerate(layout):
+            p = gp[f"l{i}"]
+            h = rmsnorm(x, p["norm_mixer"], cfg.norm_eps)
+            h, nc = attn_lib.gqa_chunk_apply(h, p["attn"], gc[f"l{i}"], cfg, pos)
             new_gc[f"l{i}"] = nc
             x = x + h
             if ffn != "none":

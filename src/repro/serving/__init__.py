@@ -1,3 +1,5 @@
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.kv_pool import PagePool
+from repro.serving.prefix_cache import PrefixCache
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "ServingEngine", "PagePool", "PrefixCache"]

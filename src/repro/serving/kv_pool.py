@@ -1,0 +1,181 @@
+"""Paged KV-cache page allocator: one shared HBM pool, scattered pages.
+
+The paper's Fine-grained Sparse Computation replaces contiguous KV block
+loading with simultaneous *discrete* KV position loading — the attention
+path already gathers non-contiguous KV, so a sequence's cache does not
+need to be contiguous either.  :class:`PagePool` manages a fixed pool of
+``num_pages`` fixed-size pages (the device arrays live in the model cache
+pytree, shaped ``(num_groups, num_pages, ..., page_size, ...)`` per layer;
+this class is the *host-side* allocator — free list, per-page reference
+counts, per-sequence page tables).
+
+Conventions:
+
+* **Page 0 is the reserved null/trash page.**  It is never allocated;
+  page-table slots that are unassigned (or writes by inactive batch
+  slots) point at page 0, so jitted scatter code never needs a branch —
+  garbage lands in the trash page and is never read back (reads are
+  masked by ``cache_len``).
+* Pages are **ref-counted**: the prefix cache maps identical prompt
+  prefixes of several sequences onto the same physical pages (each live
+  user holds one reference; the prefix index itself may hold one more so
+  hot prefixes survive sequence retirement until evicted).
+* **Copy-on-write** is the escape hatch for writing into a shared page:
+  :meth:`ensure_writable` returns the page itself when the caller holds
+  the only reference, otherwise allocates a fresh page, tells the caller
+  to copy the payload, and drops one reference on the shared page.  With
+  full-page-granularity sharing decode appends always land in private
+  pages, so CoW is a correctness backstop (counted, tested) rather than a
+  hot path.
+
+The allocator is deliberately plain Python + integers: it runs on the
+host next to the scheduler, and the device only ever sees int32 page
+tables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# Single source of truth for the reserved-page convention shared by the
+# allocator, the engine's page tables, and the jitted scatter/kernel code.
+from repro.models.cache import NULL_PAGE
+
+
+@dataclasses.dataclass
+class PoolStats:
+    pages_in_use: int = 0
+    pages_hwm: int = 0  # high-water mark of pages_in_use
+    allocations: int = 0
+    cow_copies: int = 0
+
+
+class PagePool:
+    """Fixed-size page allocator over a shared pool of ``num_pages`` pages.
+
+    ``num_pages`` counts *allocatable* pages; one extra slot (page 0) is
+    reserved as the null/trash page, so the device arrays must be sized
+    ``num_pages + 1`` along the page axis (see
+    :func:`repro.models.cache.PagedKVLayout.total_pages`).
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # LIFO free list keeps recently-freed (cache-warm) pages hot.
+        self._free = list(range(num_pages, 0, -1))
+        self._refs = [0] * (num_pages + 1)
+        self.stats = PoolStats()
+
+    # ---------------------------------------------------------- queries ----
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def refcount(self, page: int) -> int:
+        return self._refs[page]
+
+    def pages_for_tokens(self, n_tokens: int) -> int:
+        """Number of pages covering ``n_tokens`` cache positions."""
+        return -(-n_tokens // self.page_size)
+
+    # ------------------------------------------------------- allocation ----
+
+    def alloc(self) -> int:
+        """Allocate one page (refcount 1).  Raises ``MemoryError`` when the
+        pool is exhausted — callers evict/preempt and retry."""
+        if not self._free:
+            raise MemoryError("KV page pool exhausted")
+        page = self._free.pop()
+        assert self._refs[page] == 0, (page, self._refs[page])
+        self._refs[page] = 1
+        self.stats.allocations += 1
+        self._touch()
+        return page
+
+    def alloc_many(self, n: int) -> list[int]:
+        """Allocate ``n`` pages atomically (all or nothing)."""
+        if n > len(self._free):
+            raise MemoryError(
+                f"KV page pool exhausted: need {n}, have {len(self._free)}")
+        return [self.alloc() for _ in range(n)]
+
+    def share(self, page: int) -> int:
+        """Take an additional reference on an allocated page."""
+        if page == NULL_PAGE:
+            raise ValueError("cannot share the null page")
+        if self._refs[page] == 0:
+            raise ValueError(f"page {page} is not allocated")
+        self._refs[page] += 1
+        return page
+
+    def release(self, page: int) -> bool:
+        """Drop one reference; returns True when the page was freed."""
+        if page == NULL_PAGE:
+            return False
+        if self._refs[page] <= 0:
+            raise ValueError(f"double free of page {page}")
+        self._refs[page] -= 1
+        if self._refs[page] == 0:
+            self._free.append(page)
+            return True
+        return False
+
+    def release_table(self, table) -> int:
+        """Release every non-null entry of a page-table row; returns the
+        number of pages actually freed."""
+        freed = 0
+        for page in table:
+            if int(page) != NULL_PAGE:
+                freed += bool(self.release(int(page)))
+        return freed
+
+    # ---------------------------------------------------- copy-on-write ----
+
+    def ensure_writable(self, page: int) -> tuple[int, bool]:
+        """Prepare ``page`` for an in-place write by a caller holding one
+        of its references.
+
+        Returns ``(page, False)`` when the caller is the sole owner.  When
+        the page is shared, allocates a fresh page, transfers the caller's
+        reference to it, and returns ``(new_page, True)`` — the caller
+        must then copy the page payload on device (see
+        ``ServingEngine._copy_page``) before writing.
+        """
+        if self._refs[page] == 0:
+            raise ValueError(f"page {page} is not allocated")
+        if self._refs[page] == 1:
+            return page, False
+        fresh = self.alloc()
+        self._refs[page] -= 1  # caller's ref moves to the copy
+        self.stats.cow_copies += 1
+        return fresh, True
+
+    # ------------------------------------------------------------ stats ----
+
+    def _touch(self) -> None:
+        used = self.pages_in_use
+        self.stats.pages_in_use = used
+        if used > self.stats.pages_hwm:
+            self.stats.pages_hwm = used
+
+    def check_consistency(self) -> None:
+        """Invariant check for tests: free list + referenced pages
+        partition the pool exactly."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate pages in free list"
+        assert NULL_PAGE not in free
+        for page in range(1, self.num_pages + 1):
+            if page in free:
+                assert self._refs[page] == 0, (page, self._refs[page])
+            else:
+                assert self._refs[page] > 0, (page, self._refs[page])

@@ -1,0 +1,171 @@
+"""Prefix index: map shared prompt prefixes onto shared physical KV pages.
+
+Multi-turn serving workloads (the MInference-class long-context traffic
+this repo targets) resend the same system prompt / conversation prefix
+with every request.  The KV of a token depends only on the token ids at
+and before its position, so two prompts that agree on their first
+``k * page_size`` tokens can *share* the physical pages holding that
+prefix — the page table of the new request simply points at the existing
+pages (one extra refcount each) and only the divergent suffix costs fresh
+pages.
+
+Sharing is **full-page granular**: a page is indexed only when every one
+of its ``page_size`` positions is a prompt token (partial tail pages stay
+private — they are the pages decode appends into, which keeps shared
+pages immutable and makes copy-on-write a backstop rather than a hot
+path; see :mod:`repro.serving.kv_pool`).
+
+Structure: a hash trie.  Each node is keyed by ``(parent, page_tokens)``
+— equivalently a path of page-sized token chunks from the root — and owns
+one physical page plus an LRU tick.  The trie holds its own reference on
+every indexed page, so hot prefixes survive sequence retirement; when
+the pool runs dry the engine calls :meth:`evict` to release cold leaves
+(leaf-first LRU, so a prefix chain is always evicted suffix-first and
+interior nodes never dangle).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.serving.kv_pool import PagePool
+
+
+@dataclasses.dataclass
+class PrefixStats:
+    queries: int = 0
+    hits: int = 0  # queries that matched >= 1 page
+    shared_pages: int = 0  # total pages mapped onto existing ones
+    inserted_pages: int = 0
+    evicted_pages: int = 0
+
+
+class _Node:
+    __slots__ = ("children", "page", "tick", "parent", "key")
+
+    def __init__(self, parent: "_Node | None",
+                 key: "tuple[str, tuple[int, ...]] | None", page: int):
+        self.children: dict[tuple[int, ...], _Node] = {}
+        self.page = page
+        self.tick = 0
+        self.parent = parent
+        self.key = key
+
+
+class PrefixCache:
+    """Hash-trie prefix index over full KV pages.
+
+    The cache co-owns pages with the live sequences: ``insert`` takes one
+    pool reference per newly indexed page, ``evict`` gives it back.
+    ``match`` takes one reference *per matched page on behalf of the
+    caller* — the caller releases them through its normal page-table
+    retirement path, exactly like privately allocated pages.
+    """
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self.page_size = pool.page_size
+        self._root = _Node(None, None, -1)
+        self._clock = 0
+        self._nodes = 0
+        self.stats = PrefixStats()
+
+    def __len__(self) -> int:
+        return self._nodes
+
+    def _chunks(self, tokens) -> list[tuple[int, ...]]:
+        ps = self.page_size
+        n_full = len(tokens) // ps
+        return [tuple(int(t) for t in tokens[i * ps:(i + 1) * ps])
+                for i in range(n_full)]
+
+    # ------------------------------------------------------------ match ----
+
+    def match(self, tokens, tag: str = "") -> list[int]:
+        """Longest full-page prefix match; returns the shared page ids.
+
+        Each returned page carries one fresh pool reference owned by the
+        caller (release via the page table as usual).  ``tag`` namespaces
+        the trie: pages are only shared between requests whose prefill
+        produces the prefix KV with the same attention math (the engine
+        passes its algorithm name; chunked prefill uses its own tag).
+        """
+        self.stats.queries += 1
+        self._clock += 1
+        node = self._root
+        pages: list[int] = []
+        for chunk in self._chunks(tokens):
+            child = node.children.get((tag, chunk))
+            if child is None:
+                break
+            child.tick = self._clock
+            pages.append(self.pool.share(child.page))
+            node = child
+        if pages:
+            self.stats.hits += 1
+            self.stats.shared_pages += len(pages)
+        return pages
+
+    # ----------------------------------------------------------- insert ----
+
+    def insert(self, tokens, pages, tag: str = "") -> int:
+        """Index the full-page prefix of ``tokens`` held in ``pages``.
+
+        ``pages[i]`` must hold the KV of tokens ``[i*ps, (i+1)*ps)`` and be
+        owned (referenced) by the caller.  Pages already indexed are left
+        untouched; each newly indexed page gains one trie-owned reference.
+        ``tag`` must match the one future ``match`` calls will use (see
+        there).  Returns the number of pages newly indexed.
+        """
+        self._clock += 1
+        node = self._root
+        added = 0
+        for i, chunk in enumerate(self._chunks(tokens)):
+            if i >= len(pages):
+                break
+            key = (tag, chunk)
+            child = node.children.get(key)
+            if child is None:
+                child = _Node(node, key, self.pool.share(int(pages[i])))
+                node.children[key] = child
+                self._nodes += 1
+                added += 1
+            child.tick = self._clock
+            node = child
+        self.stats.inserted_pages += added
+        return added
+
+    # ----------------------------------------------------------- evict ----
+
+    def _leaves(self) -> list[_Node]:
+        out = []
+        stack = list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            else:
+                out.append(n)
+        return out
+
+    def evict(self, want_free: int) -> int:
+        """Release trie references, coldest leaves first, until the pool
+        has ``want_free`` free pages (or the trie is empty).
+
+        Returns the number of pages actually freed (a released reference
+        frees the page only when no live sequence still shares it).
+        """
+        freed = 0
+        while self.pool.free_pages < want_free:
+            leaves = self._leaves()
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda n: n.tick)
+            freed += bool(self.pool.release(victim.page))
+            del victim.parent.children[victim.key]
+            self._nodes -= 1
+            self.stats.evicted_pages += 1
+        return freed
+
+    def clear(self) -> int:
+        return self.evict(self.pool.num_pages + 1)
