@@ -23,6 +23,7 @@ SUITES = [
     "recall_sparsity",  # Fig. 6a + Table 1 + Fig. 5
     "ablation_theta",  # Table 4
     "latency",  # Fig. 2 / 6b / 6c
+    "prefill_index",  # gather-based vs index-driven sparse stage
     "ruler_proxy",  # Table 3 proxy
     "roofline_report",  # §Dry-run / §Roofline
     "serving_throughput",  # dense-slab vs paged KV-cache engine

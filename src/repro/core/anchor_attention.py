@@ -431,9 +431,21 @@ def anchor_attention(
             return out, counts
         return out
     if hkv != hq:
+        # GQA without shared selection: vmap the query-group axis with
+        # K/V *broadcast* (in_axes=None) — per-head math is unchanged,
+        # but K/V are never replicated to Hq width in HBM.
         rep = hq // hkv
-        k = jnp.repeat(k, rep, axis=1)
-        v = jnp.repeat(v, rep, axis=1)
+        qg = q.reshape(b, hkv, rep, n, d)
+        per_group = jax.vmap(_anchor_attention_head,
+                             in_axes=(0, None, None, None, None))
+        fn = jax.vmap(jax.vmap(per_group, in_axes=(0, 0, 0, None, None)),
+                      in_axes=(0, 0, 0, None,
+                               0 if lengths is not None else None))
+        out, counts = fn(qg, k, v, cfg, lengths)
+        out = out.reshape(b, hq, n, -1).astype(q.dtype)
+        if return_stats:
+            return out, counts.reshape(b, hq, -1)
+        return out
     fn = jax.vmap(jax.vmap(_anchor_attention_head, in_axes=(0, 0, 0, None, None)),
                   in_axes=(0, 0, 0, None, 0 if lengths is not None else None))
     out, counts = fn(q, k, v, cfg, lengths)

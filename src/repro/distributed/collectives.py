@@ -20,20 +20,23 @@ _NEG_INF = -1e30
 
 
 def _local_partial(q, k_shard, v_shard, valid):
-    """Partial (m, l, acc) over a local KV shard.
+    """Partial (m, l, acc) over a local KV shard, GQA-group-native.
 
-    q: (B, H, 1, D); k/v_shard: (B, H, S_loc, D); valid: (B, 1, 1, S_loc).
+    q: (B, Hq, 1, D); k/v_shard: (B, Hkv, S_loc, D); valid: (B, 1, 1, 1,
+    S_loc).  The einsums are group-batched at Hkv width — the KV shard is
+    never replicated to Hq.  Shapes out: (B, Hkv, G, 1[, D]).
     """
-    d = q.shape[-1]
+    b, hq, _, d = q.shape
+    hkv = k_shard.shape[1]
+    qg = q.reshape(b, hkv, hq // hkv, 1, d).astype(jnp.float32)
     s = jnp.einsum(
-        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k_shard.astype(jnp.float32)
-    ) / (d ** 0.5)
+        "bhgqd,bhkd->bhgqk", qg, k_shard.astype(jnp.float32)) / (d ** 0.5)
     s = jnp.where(valid, s, _NEG_INF)
-    m = jnp.max(s, axis=-1)  # (B, H, 1)
+    m = jnp.max(s, axis=-1)  # (B, Hkv, G, 1)
     p = jnp.exp(s - m[..., None])
     p = jnp.where(valid, p, 0.0)
     l = jnp.sum(p, axis=-1)
-    acc = jnp.einsum("bhqk,bhkd->bhqd", p, v_shard.astype(jnp.float32))
+    acc = jnp.einsum("bhgqk,bhkd->bhgqd", p, v_shard.astype(jnp.float32))
     return m, l, acc
 
 
@@ -54,12 +57,7 @@ def flash_decode_sharded(
     Combine: m* = pmax(m); l* = psum(l·e^{m−m*}); acc* = psum(acc·e^{m−m*}).
     Wire cost per step: 2·B·H·(1 + D) floats — negligible vs. the cache.
     """
-    b, hq, _, dd = q.shape
     hkv = k_cache.shape[1]
-    if hkv != hq:
-        rep = hq // hkv
-        k_cache = jnp.repeat(k_cache, rep, axis=1)
-        v_cache = jnp.repeat(v_cache, rep, axis=1)
     n_shards = mesh.shape[seq_axis]
     s_global = k_cache.shape[2]
     s_local = s_global // n_shards
@@ -67,16 +65,26 @@ def flash_decode_sharded(
     def body(q, k_shard, v_shard):
         idx = jax.lax.axis_index(seq_axis)
         pos = idx * s_local + jnp.arange(s_local)
-        valid = (pos < cache_len)[None, None, None, :]
+        valid = (pos < cache_len)[None, None, None, None, :]
         m, l, acc = _local_partial(q, k_shard, v_shard, valid)
         m_star = jax.lax.pmax(m, seq_axis)
         scale = jnp.exp(m - m_star)
         l_star = jax.lax.psum(l * scale, seq_axis)
         acc_star = jax.lax.psum(acc * scale[..., None], seq_axis)
-        return (acc_star / jnp.maximum(l_star, 1e-30)[..., None]).astype(q.dtype)
+        out = acc_star / jnp.maximum(l_star, 1e-30)[..., None]
+        return out.reshape(q.shape).astype(q.dtype)
 
-    spec_q = P(None, "model", None, None) if "model" in mesh.axis_names else P()
-    spec_kv = P(None, "model", seq_axis, None) if "model" in mesh.axis_names else P(
+    # Head-shard over `model` only when whole KV GROUPS land on each
+    # shard (model | Hkv): the in-body GQA fold pairs local query head
+    # h with local KV head h // G, which is only the right pairing for
+    # contiguous group-aligned shards.  K/V now stay at Hkv width (no
+    # repeat-to-Hq), so a model axis wider than Hkv replicates heads
+    # instead — the sequence axis still carries the sharding that
+    # matters here (the cache).
+    shard_heads = ("model" in mesh.axis_names
+                   and hkv % mesh.shape["model"] == 0)
+    spec_q = P(None, "model", None, None) if shard_heads else P()
+    spec_kv = P(None, "model", seq_axis, None) if shard_heads else P(
         None, None, seq_axis, None)
     fn = shard_map(
         body,

@@ -4,39 +4,42 @@ Kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
 validated on CPU via interpret mode.  Every public op routes through the
 backend registry in :mod:`repro.kernels.dispatch` (``"xla"``,
 ``"pallas_interpret"``, ``"pallas_tpu"``); see the README backend matrix.
+Index-table construction for the sparse ops lives in
+:mod:`repro.kernels.indexing`.
 """
 
-from repro.kernels import dispatch, ref
+from repro.kernels import dispatch, indexing, ref
+from repro.kernels.indexing import StripeIndex
 from repro.kernels.ops import (
     anchor_attention,
-    anchor_attention_pallas,
     anchor_phase,
-    anchor_phase_pallas,
     attention,
+    chunk_anchor_attention,
+    compact_stripe_tiles,
     flash_attention,
     flash_decode,
     pack_stripe_indices,
+    paged_flash_decode,
     sparse_attention,
-    sparse_attention_pallas,
     ssd_chunked,
     stripe_select,
-    stripe_select_pallas,
 )
 
 __all__ = [
+    "StripeIndex",
     "anchor_attention",
-    "anchor_attention_pallas",
     "anchor_phase",
-    "anchor_phase_pallas",
     "attention",
+    "chunk_anchor_attention",
+    "compact_stripe_tiles",
     "dispatch",
     "flash_attention",
     "flash_decode",
+    "indexing",
     "pack_stripe_indices",
+    "paged_flash_decode",
     "ref",
     "sparse_attention",
-    "sparse_attention_pallas",
     "ssd_chunked",
     "stripe_select",
-    "stripe_select_pallas",
 ]

@@ -24,6 +24,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.compat import tpu_compiler_params
 from repro.core.config import AnchorConfig
 from repro.kernels import dispatch
+from repro.kernels.indexing import kv_head_index
 
 _NEG_INF = -1e30
 
@@ -101,7 +102,6 @@ def anchor_phase_pallas(
     """
     batch, hq, n, d = q.shape
     hkv = k.shape[1]
-    group = hq // hkv
     t_m = cfg.num_q_blocks(n)
     t_n = cfg.num_kv_blocks(n)
     n_slots = 1 + cfg.step * cfg.r + cfg.r
@@ -118,7 +118,7 @@ def anchor_phase_pallas(
 
     def kv_index(b, i, w):
         blk = jnp.clip(_candidate_block(i, w, cfg), 0, t_n - 1)
-        return (b // hq) * hkv + (b % hq) // group, blk, 0
+        return kv_head_index(b, hq, hkv), blk, 0
 
     kernel = functools.partial(_anchor_kernel, cfg=cfg, scale=scale, t_n=t_n)
     m, l, acc = pl.pallas_call(

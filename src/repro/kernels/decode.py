@@ -20,6 +20,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
 from repro.kernels import dispatch
+from repro.kernels.indexing import kv_head_index
 
 _NEG_INF = -1e30
 
@@ -78,7 +79,6 @@ def flash_decode(
     """
     b, hq, _, d = q.shape
     hkv, s_len = k_cache.shape[1], k_cache.shape[2]
-    group = hq // hkv
     # Any cache length works: clamp the tile to the cache, then pad the
     # grid with a (masked) tail block when block_s does not divide s_len.
     # Tail-block columns land at >= s_len >= cache_len, so the existing
@@ -93,7 +93,7 @@ def flash_decode(
     len_arr = jnp.full((1, 1), cache_len, jnp.int32)
 
     def kv_index(bh, j):
-        return (bh // hq) * hkv + (bh % hq) // group, j, 0
+        return kv_head_index(bh, hq, hkv), j, 0
 
     kernel = functools.partial(_decode_kernel, block_s=block_s, scale=scale)
     out = pl.pallas_call(
@@ -193,7 +193,6 @@ def paged_flash_decode(
     """
     b, hq, _, d = q.shape
     hkv, page_size = k_pages.shape[1], k_pages.shape[2]
-    group = hq // hkv
     n_pages = page_tables.shape[1]
     scale = 1.0 / (d ** 0.5)
 
@@ -205,7 +204,10 @@ def paged_flash_decode(
         return bh, 0, 0
 
     def kv_index(bh, j, pt_ref, len_ref):
-        return pt_ref[bh // hq, j], (bh % hq) // group, 0, 0
+        # Page-table indirection + the shared GQA fold: physical page id
+        # from the scalar-prefetched table, KV head from kv_head_index
+        # (modulo the batch term, which the page axis already encodes).
+        return pt_ref[bh // hq, j], kv_head_index(bh % hq, hq, hkv), 0, 0
 
     kernel = functools.partial(
         _paged_decode_kernel, page_size=page_size, scale=scale)

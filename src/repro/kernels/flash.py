@@ -25,6 +25,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
 from repro.kernels import dispatch
+from repro.kernels.indexing import kv_head_index
 
 _NEG_INF = -1e30
 
@@ -96,7 +97,6 @@ def flash_attention(
     batch, hq, n, d = q.shape
     block_q, block_kv = min(block_q, n), min(block_kv, n)
     hkv = k.shape[1]
-    group = hq // hkv
     t_m, t_n = n // block_q, n // block_kv
     scale = 1.0 / (d ** 0.5)
 
@@ -111,7 +111,7 @@ def flash_attention(
 
     def kv_index(b, i, j):
         del i
-        return (b // hq) * hkv + (b % hq) // group, j, 0
+        return kv_head_index(b, hq, hkv), j, 0
 
     kernel = functools.partial(
         _flash_kernel, block_q=block_q, block_kv=block_kv, scale=scale

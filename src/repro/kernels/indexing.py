@@ -1,0 +1,221 @@
+"""Index tables for index-driven sparse computation (DESIGN.md §3).
+
+This module owns every piece of index plumbing shared by the sparse
+kernels: stripe-index packing, tile (block-)compaction of stripe hit
+masks into GQA-native index tables, the materialized-gather twin used by
+baselines, and the flat-grid GQA fold used by the scalar-prefetch
+BlockSpec index maps of :mod:`repro.kernels.sparse` and
+:mod:`repro.kernels.decode`.
+
+The central structure is :class:`StripeIndex`: instead of materializing
+gathered ``(B, Hq, T_s, capacity, D)`` K/V copies in HBM (the pre-index
+pipeline), the sparse stage receives *tables* — per KV head, per
+superblock, the ids of the ``tile``-wide KV tiles that contain at least
+one selected stripe, plus a per-QUERY-head validity bit for every packed
+KV row.  The kernels then load those discrete tiles straight from the
+original ``(B, Hkv, N, D)`` arrays (scalar-prefetch BlockSpec
+indirection on TPU; a per-tile-slot gather inside an online-softmax scan
+on XLA), so
+
+* the gathered-KV footprint is ``O(Hkv * capacity)`` instead of
+  ``O(Hq * capacity)`` — one KV tile feeds all ``Hq/Hkv`` query heads of
+  its group, and
+* selection stays **stripe-granular**: tiles are only the DMA
+  granularity; every non-selected row inside a loaded tile is masked out
+  of the math by ``valid`` (unlike MInference/FlexPrefill-style
+  block-granular *selection*).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class StripeIndex(NamedTuple):
+    """GQA-native stripe index tables for one sparse (Alg. 3) stage.
+
+    Attributes:
+      tile_idx: (B, Hkv, T_s, C_t) int32 — ids of the KV tiles holding
+        this superblock's selected stripes (tile ``t`` covers KV rows
+        ``[t*tile, (t+1)*tile)``), packed ascending.  Unoccupied slots
+        hold 0 and are fully masked via ``valid``.
+      tile_valid: (B, Hkv, T_s, C_t) int32 — slot occupancy.
+      valid: (B, Hkv, G, T_s, C_t * tile) int32 — per-QUERY-head
+        validity of each packed KV row (``G = Hq // Hkv``).  Row
+        ``c*tile + t`` of superblock ``s`` refers to KV position
+        ``tile_idx[..., s, c] * tile + t``.
+    """
+
+    tile_idx: jnp.ndarray
+    tile_valid: jnp.ndarray
+    valid: jnp.ndarray
+
+    @property
+    def tile(self) -> int:
+        """KV rows per indexed tile (the DMA granularity)."""
+        return self.valid.shape[-1] // self.tile_idx.shape[-1]
+
+    @property
+    def capacity(self) -> int:
+        """Packed KV rows per superblock (tile slots × tile width)."""
+        return self.valid.shape[-1]
+
+
+def kv_head_index(bh, hq: int, hkv: int):
+    """Flat ``batch*Hq`` program id → flat ``batch*Hkv`` KV row (GQA fold).
+
+    The one GQA index computation shared by every kernel BlockSpec index
+    map in this package (flash, anchor, stripe-select, sparse, decode):
+    query head ``h`` of batch ``b`` reads KV head ``h // (hq // hkv)``.
+    """
+    return (bh // hq) * hkv + (bh % hq) // (hq // hkv)
+
+
+def stripe_tile(n: int, block_c: int) -> int:
+    """Largest tile width <= ``block_c`` that divides ``n`` exactly.
+
+    The sparse kernels index KV in ``tile``-row blocks; an exact divisor
+    keeps every tile in-bounds (no partial tail tiles to mask).
+    """
+    return math.gcd(n, max(1, block_c))
+
+
+def pack_stripe_indices(
+    hit: jnp.ndarray, capacity: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Compact a (…, T_s, N) int32 hit-mask into (…, T_s, capacity) indices.
+
+    Position-ordered packing: priority = hit*2 - pos/N, so selected stripes
+    come first (ascending position), padding after.  ``capacity`` may
+    exceed ``N`` (e.g. a tile-padded capacity over a non-tile-multiple
+    ``N``): the extra slots are padded with ``idx=0, valid=0`` instead of
+    feeding ``jax.lax.top_k`` an out-of-range ``k``.  Returns
+    ``(idx, valid)``.
+    """
+    n = hit.shape[-1]
+    k_eff = min(capacity, n)
+    pos = jnp.arange(n, dtype=jnp.float32) / n
+    priority = hit.astype(jnp.float32) * 2.0 - pos
+    _, idx = jax.lax.top_k(priority, k_eff)
+    valid = jnp.take_along_axis(hit, idx, axis=-1)
+    idx = idx.astype(jnp.int32)
+    valid = valid.astype(jnp.int32)
+    if capacity > k_eff:
+        pad_shape = (*hit.shape[:-1], capacity - k_eff)
+        idx = jnp.concatenate([idx, jnp.zeros(pad_shape, jnp.int32)], axis=-1)
+        valid = jnp.concatenate(
+            [valid, jnp.zeros(pad_shape, jnp.int32)], axis=-1)
+    return idx, valid
+
+
+def compact_stripe_tiles(
+    hit: jnp.ndarray,
+    hkv: int,
+    tile: int,
+    capacity: int | None = None,
+    share: bool = False,
+) -> tuple[StripeIndex, jnp.ndarray]:
+    """Tile-compact a per-query-head stripe hit mask into GQA-native tables.
+
+    Args:
+      hit: (B, Hq, T_s, N) int32/bool stripe hit mask (Alg. 2 output).
+      hkv: number of KV heads (``Hq % hkv == 0``).
+      tile: KV rows per indexed tile; must divide ``N``.
+      capacity: per-superblock, per-query-head stripe budget (``None`` =
+        all candidates; exact).  Overflow keeps each head's earliest
+        stripes by position — the same per-head semantics as the
+        pre-index pipeline (tables then hold the union of the clamped
+        per-head selections, so a group's table may span up to
+        ``G * capacity`` stripes).  With ``share`` the budget applies to
+        the shared (union) selection.
+      share: ``AnchorConfig.share_kv_groups`` — every query head of a
+        group uses the unioned selection (validity identical across G).
+
+    Returns:
+      (tables, counts): the :class:`StripeIndex` tables and the per-head
+      kept-stripe counts (B, Hq, T_s) for sparsity accounting.
+
+    Packing is sort-free (cumsum rank + scatter, §Perf iteration C3) and
+    position-ascending, which is what makes the tile-slot scan of the
+    consumers bit-stable: a query head's kept stripes appear in the same
+    relative order whether packed alone (Hq == Hkv) or inside its
+    group's union, and slots foreign to a head are exact no-ops.
+    """
+    b, hq, t_s, n = hit.shape
+    if n % tile:
+        raise ValueError(f"tile ({tile}) must divide N ({n})")
+    g = hq // hkv
+    n_tiles = n // tile
+    hitb = hit.astype(bool).reshape(b, hkv, g, t_s, n)
+    if share:
+        hitb = jnp.broadcast_to(hitb.any(axis=2, keepdims=True), hitb.shape)
+    cap_s = n if capacity is None else min(capacity, n)
+    if cap_s < n:
+        # Per-HEAD budget (matches the pre-index pipeline: each query
+        # head keeps its own earliest `capacity` stripes); under `share`
+        # all heads hold the same mask so this is the union budget.
+        rank = jnp.cumsum(hitb.astype(jnp.int32), axis=-1) - 1
+        kept_h = hitb & (rank < cap_s)
+    else:
+        kept_h = hitb  # (B, Hkv, G, T_s, N)
+    keep = kept_h.any(axis=2)  # tiles to load: union of kept selections
+
+    # Tile-level compaction of the union: which tiles must be loaded.
+    tmask = keep.reshape(b, hkv, t_s, n_tiles, tile).any(axis=-1)
+    # Each head's cap_s kept stripes touch at most cap_s tiles; the
+    # group union at most `groups_in_table * cap_s` (1 under `share`).
+    c_t = min(n_tiles, cap_s * (1 if share else g))
+    trank = jnp.cumsum(tmask.astype(jnp.int32), axis=-1) - 1
+    slot = jnp.where(tmask & (trank < c_t), trank, c_t)  # overflow -> dump
+    bi = jnp.arange(b)[:, None, None, None]
+    ki = jnp.arange(hkv)[None, :, None, None]
+    si = jnp.arange(t_s)[None, None, :, None]
+    tids = jnp.broadcast_to(
+        jnp.arange(n_tiles, dtype=jnp.int32)[None, None, None, :], slot.shape)
+    buf = jnp.zeros((b, hkv, t_s, c_t + 1), jnp.int32)
+    tile_idx = buf.at[bi, ki, si, slot].set(tids, mode="drop")[..., :c_t]
+    tcount = jnp.minimum(tmask.sum(axis=-1), c_t)
+    tile_valid = (jnp.arange(c_t)[None, None, None, :]
+                  < tcount[..., None]).astype(jnp.int32)
+
+    # Per-slot, per-query-head row validity: gather each head's kept bits
+    # at the packed tiles, masking unoccupied slots (their tile_idx of 0
+    # aliases a real tile).
+    kept_t = kept_h.reshape(b, hkv, g, t_s, n_tiles, tile)
+    idx6 = jnp.broadcast_to(
+        tile_idx[:, :, None, :, :, None], (b, hkv, g, t_s, c_t, 1))
+    gathered = jnp.take_along_axis(kept_t, idx6, axis=4)  # (..., C_t, tile)
+    occupied = tile_valid[:, :, None, :, :, None].astype(bool)
+    valid = (gathered & occupied).reshape(b, hkv, g, t_s, c_t * tile)
+
+    counts = kept_h.sum(axis=-1).reshape(b, hq, t_s).astype(jnp.int32)
+    return (
+        StripeIndex(tile_idx.astype(jnp.int32), tile_valid,
+                    valid.astype(jnp.int32)),
+        counts,
+    )
+
+
+def gather_stripe_tiles(
+    kv: jnp.ndarray, tables: StripeIndex
+) -> jnp.ndarray:
+    """Materialize the indexed tiles: (B, Hkv, N, D) → (B, Hkv, T_s, C, D).
+
+    The gather-based twin of the index-driven loaders — used by the
+    baseline in ``benchmarks/prefill_index.py`` and by the bit-exactness
+    tests (gather-then-compute must equal compute-with-inline-gather).
+    Note the result is Hkv-wide; the pre-index pipeline materialized this
+    at Hq width *after* a ``jnp.repeat`` of K/V.
+    """
+    b, hkv, n, d = kv.shape
+    tile = tables.tile
+    t_s, c_t = tables.tile_idx.shape[2], tables.tile_idx.shape[3]
+    kb = kv.reshape(b, hkv, 1, n // tile, tile, d)
+    idx = jnp.broadcast_to(
+        tables.tile_idx[..., None, None], (b, hkv, t_s, c_t, 1, 1))
+    out = jnp.take_along_axis(kb, idx, axis=3)  # (B, Hkv, T_s, C_t, tile, D)
+    return out.reshape(b, hkv, t_s, c_t * tile, d)

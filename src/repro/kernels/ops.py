@@ -11,29 +11,38 @@ masking) plus an optional per-sequence ``lengths`` array for right-padded
 variable-length batches, and dispatches to the dense flash path or the
 AnchorAttention pipeline accordingly.
 
-``anchor_attention`` on the pallas backends chains Alg. 1 → Alg. 2 → (XLA
-index packing) → Alg. 3.  The packing step converts the kernel's stripe
-hit-mask into dense ``(T_s, capacity)`` gather indices — the static-shape
-TPU stand-in for the paper's dynamic index lists (DESIGN.md §3).  Packing
-is position-ordered and drops nothing when ``capacity >= max selected``,
-which tests assert.
+``anchor_attention`` chains Alg. 1 → Alg. 2 → (index-table compaction)
+→ Alg. 3 on every backend.  The compaction step
+(:func:`repro.kernels.indexing.compact_stripe_tiles`) converts the
+stripe hit-mask into GQA-native :class:`~repro.kernels.indexing.
+StripeIndex` tables — discrete KV *tile ids* per KV head plus
+per-query-head row validity — and the sparse stage loads those tiles
+straight from the original ``(B, Hkv, N, D)`` arrays (scalar-prefetch
+BlockSpec indirection on the Pallas backends, a per-slot gather scan on
+XLA).  Nothing Hq-wide is ever materialized; selection itself stays
+stripe-granular (DESIGN.md §3).
 
-The ``*_pallas`` names are kept as deprecated aliases of the dispatched
-entry points (they resolve to the Pallas kernels under the default backend
-on both CPU and TPU) and emit a ``DeprecationWarning``.
+:func:`chunk_anchor_attention` applies the same index-driven machinery
+to one superblock-aligned chunk of a chunked prefill attending into a
+KV-cache view — the serving path that keeps long-prompt chunks sparse
+instead of falling back to dense history attention.
 """
 
 from __future__ import annotations
 
 import functools
-import warnings
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.config import AnchorConfig
 from repro.core.spec import AttentionSpec
-from repro.kernels import dispatch
+from repro.kernels import dispatch, indexing
+from repro.kernels.indexing import (
+    StripeIndex,
+    compact_stripe_tiles,
+    pack_stripe_indices,
+)
 
 # Importing the implementation modules populates the backend registry.
 from repro.kernels import anchor as _anchor  # noqa: F401
@@ -43,6 +52,8 @@ from repro.kernels import sparse as _sparse  # noqa: F401
 from repro.kernels import ssd as _ssd  # noqa: F401
 from repro.kernels import stripe_select as _stripe_select  # noqa: F401
 from repro.kernels import xla as _xla  # noqa: F401
+
+_NEG_INF = -1e30
 
 __all__ = [
     "attention",
@@ -54,12 +65,10 @@ __all__ = [
     "sparse_attention",
     "ssd_chunked",
     "anchor_attention",
+    "chunk_anchor_attention",
     "pack_stripe_indices",
-    # Deprecated aliases.
-    "anchor_phase_pallas",
-    "stripe_select_pallas",
-    "sparse_attention_pallas",
-    "anchor_attention_pallas",
+    "compact_stripe_tiles",
+    "StripeIndex",
 ]
 
 
@@ -208,9 +217,9 @@ def stripe_select(
 
 def sparse_attention(
     q: jnp.ndarray,
-    k_sel: jnp.ndarray,
-    v_sel: jnp.ndarray,
-    valid: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    tables: StripeIndex,
     m0: jnp.ndarray,
     l0: jnp.ndarray,
     acc0: jnp.ndarray,
@@ -218,10 +227,16 @@ def sparse_attention(
     block_c: int | None = None,
     backend: str | None = None,
 ) -> jnp.ndarray:
-    """Alg. 3 — resume the online softmax over gathered stripe tiles."""
+    """Alg. 3 — index-driven resume of the online softmax.
+
+    ``k``/``v`` are the ORIGINAL (B, Hkv, Nk, D) arrays; ``tables`` is a
+    :class:`repro.kernels.indexing.StripeIndex` naming the discrete KV
+    tiles to load per (KV head, superblock) with per-query-head row
+    validity.  No gathered K/V copies are taken (see module docstring).
+    """
     fn, _ = dispatch.lookup("sparse_attention", backend)
     kw = {} if block_c is None else {"block_c": block_c}
-    return fn(q, k_sel, v_sel, valid, m0, l0, acc0, cfg, **kw)
+    return fn(q, k, v, tables, m0, l0, acc0, cfg, **kw)
 
 
 def ssd_chunked(
@@ -262,22 +277,6 @@ def anchor_attention(
     return fn(q, k, v, cfg, return_stats=return_stats, **kw)
 
 
-def pack_stripe_indices(
-    hit: jnp.ndarray, capacity: int
-) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Compact a (…, T_s, N) int32 hit-mask into (…, T_s, capacity) indices.
-
-    Position-ordered packing: priority = hit*2 - pos/N, so selected stripes
-    come first (ascending position), padding after.  Returns (idx, valid).
-    """
-    n = hit.shape[-1]
-    pos = jnp.arange(n, dtype=jnp.float32) / n
-    priority = hit.astype(jnp.float32) * 2.0 - pos
-    _, idx = jax.lax.top_k(priority, capacity)
-    valid = jnp.take_along_axis(hit, idx, axis=-1)
-    return idx.astype(jnp.int32), valid.astype(jnp.int32)
-
-
 @functools.partial(
     jax.jit, static_argnames=("cfg", "block_c", "return_stats", "backend")
 )
@@ -292,11 +291,19 @@ def _anchor_attention_pipeline(
     *,
     backend: str,
 ):
-    """AnchorAttention via the Pallas kernels, all stages on ``backend``."""
+    """AnchorAttention: Alg. 1 → pooling → Alg. 2 → index tables → Alg. 3.
+
+    All kernel stages run on ``backend``; the pooling and table
+    compaction are cheap XLA glue on every backend.  The sparse stage is
+    index-driven and GQA-group-native — with ``cfg.share_kv_groups`` the
+    per-head validity collapses to the group union (§Perf iteration C4);
+    otherwise per-head selection semantics are preserved exactly on the
+    shared Hkv-wide tables.
+    """
     batch, hq, n, d = q.shape
-    block_c = min(block_c, n)
     hkv = k.shape[1]
     t_m = cfg.num_q_blocks(n)
+    tile = indexing.stripe_tile(n, min(block_c, n))
 
     phase_fn, _ = dispatch.lookup("anchor_phase", backend)
     select_fn, _ = dispatch.lookup("stripe_select", backend)
@@ -338,83 +345,173 @@ def _anchor_attention_pipeline(
     else:
         hit = select_fn(q_mean, m_bar, k, cfg, lengths=lengths)
 
-    # XLA packing + gather-compaction (TPU adaptation of discrete loading).
-    capacity = cfg.capacity if cfg.capacity is not None else n
-    capacity = max(block_c, min(capacity, n))
-    capacity = ((capacity + block_c - 1) // block_c) * block_c
-    idx, valid = pack_stripe_indices(hit, capacity)  # (B, Hq, T_s, C)
+    # Index-table compaction (TPU adaptation of discrete loading,
+    # DESIGN.md §3): discrete KV tile ids at Hkv width + per-query-head
+    # row validity — no gathered K/V copies, no KV replication.
+    tables, counts = compact_stripe_tiles(
+        hit, hkv, tile, cfg.capacity, share=cfg.share_kv_groups)
 
-    if hkv != hq:
-        rep = hq // hkv
-        k_full = jnp.repeat(k, rep, axis=1)
-        v_full = jnp.repeat(v, rep, axis=1)
-    else:
-        k_full, v_full = k, v
-    k_sel = jnp.take_along_axis(k_full[:, :, None], idx[..., None], axis=3)
-    v_sel = jnp.take_along_axis(v_full[:, :, None], idx[..., None], axis=3)
-
-    # Alg. 3 — resume the online softmax over gathered stripes.
-    out = sparse_fn(q, k_sel, v_sel, valid, m, l, acc, cfg, block_c)
+    # Alg. 3 — resume the online softmax over the indexed tiles.
+    out = sparse_fn(q, k, v, tables, m, l, acc, cfg, block_c)
     if lengths is not None:
         # Padded query rows produce exact zeros.
         rows = jnp.arange(n)[None, None, :, None] < lengths[:, None, None, None]
         out = jnp.where(rows, out, jnp.zeros((), out.dtype))
     if return_stats:
-        counts = hit.sum(axis=-1)  # (B, Hq, T_s)
         return out, counts
     return out
 
 
-dispatch.register("anchor_attention", "pallas_interpret")(
-    functools.partial(_anchor_attention_pipeline, backend="pallas_interpret"))
-dispatch.register("anchor_attention", "pallas_tpu")(
-    functools.partial(_anchor_attention_pipeline, backend="pallas_tpu"))
+for _backend in dispatch.BACKENDS:
+    dispatch.register("anchor_attention", _backend)(
+        functools.partial(_anchor_attention_pipeline, backend=_backend))
 
 
-def _pallas_backend(backend: str | None) -> str:
-    """Resolve a backend for the ``*_pallas`` aliases — never ``xla``.
+@functools.partial(jax.jit, static_argnames=("cfg", "block_c", "backend"))
+def _chunk_anchor_impl(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,
+    cfg: AnchorConfig,
+    block_c: int = 128,
+    live: jnp.ndarray | None = None,
+    *,
+    backend: str,
+):
+    """AnchorAttention for one superblock-aligned chunk over a KV cache.
 
-    The historical names promise the Pallas kernel path runs; if the
-    process default is ``xla`` (e.g. ``$REPRO_BACKEND=xla``), fall through
-    to the platform-appropriate pallas backend instead of silently
-    executing the pure-XLA implementations under a pallas name.
+    The chunk's query rows sit at global positions ``[pos, pos + C)``;
+    the cache views hold the real history at ``[0, pos)`` and the
+    chunk's own K/V at ``[pos, pos + C)`` (the caller writes them before
+    attending, exactly like the dense chunk path).  Because chunks are
+    superblock-aligned, the anchor region decomposes cleanly:
+
+    * init (sink) block — cache block 0, shared with the history;
+    * local window — entirely inside the chunk (a superblock's window
+      starts at its own first block);
+    * stripe candidates — ``[block_kv, superblock_start)``: pure
+      history, selected by the usual difference-aware threshold and
+      resumed through the SAME index-driven ``sparse_attention`` op the
+      full prefill uses.
+
+    For a full prompt processed chunk by chunk this computes exactly the
+    same attention as one-shot anchor prefill (same regions, same
+    selection rule) — which is what lets the serving engine keep long
+    chunked prompts sparse instead of falling back to dense history
+    attention.
+
+    ``live`` (() int32, optional) is the number of REAL rows of a
+    zero-padded final chunk.  Causality already keeps pad keys out of
+    every live row's scores and candidates (pads sit after all live
+    rows), but the *pooled* identification statistics cross rows:
+    without masking, pad-row queries in a live row's block_q block shift
+    ``q_mean``/``m_bar`` and change that block's stripe selection.  Live
+    rows must match the one-shot varlen prefill, so pooling excludes
+    rows >= live (all-pad blocks pool to +inf, which never selects).
     """
-    b = dispatch.resolve_backend(backend)
-    if b == "xla":
-        b = "pallas_tpu" if jax.default_backend() == "tpu" else "pallas_interpret"
-    return b
+    b, hq, c, d = q.shape
+    hkv, s_len = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    dv = v_cache.shape[-1]
+    sb = cfg.superblock_q()
+    if c % sb:
+        raise ValueError(
+            f"chunk length {c} must be a multiple of the identification "
+            f"superblock ({sb})")
+    t_mc = c // cfg.block_q
+    t_sc = c // sb
+    scale = 1.0 / (d ** 0.5)
+    f32 = jnp.float32
+
+    qg = q.reshape(b, hkv, g, c, d).astype(f32)
+    row = pos + jnp.arange(c)  # global query positions
+
+    # --- Alg. 1 over (init block ∪ in-chunk window).
+    k0 = k_cache[:, :, : cfg.block_kv].astype(f32)
+    s0 = jnp.einsum("bkgqd,bknd->bkgqn", qg, k0) * scale
+    ok0 = jnp.arange(cfg.block_kv)[None, :] <= row[:, None]  # (C, b_kv)
+    s0 = jnp.where(ok0[None, None, None], s0, _NEG_INF)
+    kc = jax.lax.dynamic_slice_in_dim(k_cache, pos, c, axis=2).astype(f32)
+    vc = jax.lax.dynamic_slice_in_dim(v_cache, pos, c, axis=2).astype(f32)
+    sw = jnp.einsum("bkgqd,bknd->bkgqn", qg, kc) * scale
+    # Window of row r: [w_start_tok(superblock(r)), r] — in-chunk because
+    # chunks are superblock-aligned.
+    w_start = jnp.maximum(cfg.block_kv, (row // sb) * sb)  # (C,)
+    okw = (row[None, :] >= w_start[:, None]) & (row[None, :] <= row[:, None])
+    sw = jnp.where(okw[None, None, None], sw, _NEG_INF)
+    s = jnp.concatenate([s0, sw], axis=-1)  # (B, Hkv, G, C, b_kv + C)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(s <= _NEG_INF, 0.0, p)
+    length = jnp.sum(p, axis=-1)
+    vcat = jnp.concatenate(
+        [v_cache[:, :, : cfg.block_kv].astype(f32), vc], axis=2)
+    acc = jnp.einsum("bkgqn,bknd->bkgqd", p, vcat)
+
+    # --- Alg. 2 over the history candidates.
+    qb5 = qg.reshape(b, hkv, g, t_mc, cfg.block_q, d)
+    mb5 = m.reshape(b, hkv, g, t_mc, cfg.block_q)
+    if live is None:
+        q_mean = qb5.mean(axis=4)
+        m_bar = mb5.mean(axis=4)
+    else:
+        # Pool only the live rows; all-pad blocks get an m_bar of +inf
+        # (never passes the threshold) and a q_mean of zero.
+        rv = (jnp.arange(c) < live).reshape(t_mc, cfg.block_q)
+        cnt = rv.sum(axis=1)  # (t_mc,)
+        denom = jnp.maximum(cnt, 1)[:, None]
+        rvq = rv[None, None, None, :, :, None]
+        q_mean = jnp.sum(jnp.where(rvq, qb5, 0.0), axis=4) / denom
+        m_bar = jnp.sum(jnp.where(rv[None, None, None], mb5, 0.0),
+                        axis=4) / denom[..., 0]
+        m_bar = jnp.where(cnt[None, None, None] == 0, jnp.inf, m_bar)
+    if not cfg.use_anchor:
+        m_bar = jnp.where(jnp.isinf(m_bar), m_bar, jnp.zeros_like(m_bar))
+    s_id = jnp.einsum(
+        "bkgmd,bknd->bkgmn", q_mean, k_cache.astype(f32)) * scale
+    hit = (m_bar[..., None] - s_id) <= cfg.theta
+    hit = hit.reshape(b, hkv, g, t_sc, cfg.step, s_len).any(axis=4)
+    kidx = jnp.arange(s_len)[None, :]
+    sb0 = pos // sb
+    w_start_s = jnp.maximum(cfg.block_kv, (sb0 + jnp.arange(t_sc)) * sb)
+    cand = (kidx >= cfg.block_kv) & (kidx < w_start_s[:, None])
+    hit = (hit & cand[None, None, None]).reshape(b, hq, t_sc, s_len)
+
+    # --- Alg. 3: index tables over the cache, same sparse op as prefill.
+    tile = indexing.stripe_tile(s_len, min(block_c, s_len))
+    tables, _ = compact_stripe_tiles(
+        hit.astype(jnp.int32), hkv, tile, cfg.capacity,
+        share=cfg.share_kv_groups)
+    sparse_fn, _ = dispatch.lookup("sparse_attention", backend)
+    out = sparse_fn(
+        q, k_cache, v_cache, tables,
+        m.reshape(b, hq, c), length.reshape(b, hq, c),
+        acc.reshape(b, hq, c, dv), cfg, block_c)
+    return out.astype(q.dtype)
 
 
-def _warn_pallas_alias(name: str) -> None:
-    warnings.warn(
-        f"{name}_pallas is deprecated; call kernels.ops.{name} with "
-        "backend='pallas_interpret' / 'pallas_tpu' (or rely on the "
-        "process-default backend) instead",
-        DeprecationWarning,
-        stacklevel=3,
-    )
+def chunk_anchor_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,
+    cfg: AnchorConfig,
+    block_c: int | None = None,
+    live: jnp.ndarray | None = None,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """Index-driven AnchorAttention for one chunk of a chunked prefill.
 
-
-def anchor_phase_pallas(q, k, v, cfg, backend=None):
-    _warn_pallas_alias("anchor_phase")
-    return anchor_phase(q, k, v, cfg, backend=_pallas_backend(backend))
-
-
-def stripe_select_pallas(q_mean, m_bar, k, cfg, backend=None):
-    _warn_pallas_alias("stripe_select")
-    return stripe_select(q_mean, m_bar, k, cfg, backend=_pallas_backend(backend))
-
-
-def sparse_attention_pallas(q, k_sel, v_sel, valid, m0, l0, acc0, cfg,
-                            block_c=None, backend=None):
-    _warn_pallas_alias("sparse_attention")
-    return sparse_attention(q, k_sel, v_sel, valid, m0, l0, acc0, cfg,
-                            block_c=block_c, backend=_pallas_backend(backend))
-
-
-def anchor_attention_pallas(q, k, v, cfg, block_c=None, return_stats=False,
-                            backend=None):
-    _warn_pallas_alias("anchor_attention")
-    return anchor_attention(q, k, v, cfg, block_c=block_c,
-                            return_stats=return_stats,
-                            backend=_pallas_backend(backend))
+    q: (B, Hq, C, D) chunk queries (``C % cfg.superblock_q() == 0``);
+    k_cache/v_cache: (B, Hkv, S, D) per-sequence cache views already
+    holding ``[0, pos + C)``; pos: () int32 superblock-aligned chunk
+    start; live: () int32 real rows of a zero-padded final chunk (rows
+    >= live are excluded from the pooled identification statistics and
+    their outputs are garbage the caller discards).  Returns
+    (B, Hq, C, Dv).
+    """
+    backend = dispatch.resolve_backend(backend)
+    kw = {} if block_c is None else {"block_c": block_c}
+    return _chunk_anchor_impl(
+        q, k_cache, v_cache, pos, cfg, live=live, backend=backend, **kw)

@@ -1,13 +1,18 @@
-"""Fine-Grained Sparse Computation — Pallas kernel (paper Alg. 3).
+"""Fine-Grained Sparse Computation — Pallas kernel (paper Alg. 3),
+index-driven.
 
-Resumes the online softmax from the anchor statistics ``(M, L, Acc)`` over
-*gathered* stripe tiles.  The discrete KV rows selected by Alg. 2 arrive
-pre-compacted into dense ``(T_s, capacity, d)`` tiles (XLA HBM→HBM gather —
-the TPU-native replacement for Triton's per-row global loads, DESIGN.md §3);
-the kernel itself streams those dense tiles through the MXU at full
-utilization, with a validity mask for the padded tail.
+Resumes the online softmax from the anchor statistics ``(M, L, Acc)``
+over the *discrete* KV tiles named by a :class:`repro.kernels.indexing.
+StripeIndex` table: the tile ids arrive via scalar prefetch
+(``PrefetchScalarGridSpec``) and feed the K/V BlockSpec index maps, so
+each grid step DMAs one selected tile straight out of the original
+``(B, Hkv, N, D)`` arrays — no gathered ``k_sel``/``v_sel`` copies in
+HBM, no ``jnp.repeat`` of K/V for GQA (DESIGN.md §3).  The query-head
+group dimension is folded into the block shapes: one KV tile feeds all
+``G = Hq // Hkv`` query heads of its group, and selection stays
+stripe-granular via the per-query-head ``valid`` rows.
 
-Grid: ``(batch*heads, T_m, capacity // block_c)``.
+Grid: ``(batch * Hkv, T_m, C_t)`` with the tile-slot axis sequential.
 """
 
 from __future__ import annotations
@@ -22,40 +27,46 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.compat import tpu_compiler_params
 from repro.core.config import AnchorConfig
 from repro.kernels import dispatch
+from repro.kernels.indexing import StripeIndex
 
 _NEG_INF = -1e30
 
 
 def _sparse_kernel(
-    q_ref, ks_ref, vs_ref, valid_ref, m0_ref, l0_ref, acc0_ref, o_ref,
-    ms_ref, ls_ref, accs_ref, *, scale
+    idx_ref, q_ref, k_ref, v_ref, valid_ref, m0_ref, l0_ref, acc0_ref,
+    o_ref, ms_ref, ls_ref, accs_ref, *, scale, g, block_q
 ):
+    del idx_ref  # consumed by the BlockSpec index maps
     c = pl.program_id(2)
+    rows = g * block_q
 
     @pl.when(c == 0)
     def _init():
-        ms_ref[...] = m0_ref[0][:, None]
-        ls_ref[...] = l0_ref[0][:, None]
-        accs_ref[...] = acc0_ref[0]
+        ms_ref[...] = m0_ref[0].reshape(rows)[:, None]
+        ls_ref[...] = l0_ref[0].reshape(rows)[:, None]
+        accs_ref[...] = acc0_ref[0].reshape(rows, acc0_ref.shape[-1])
 
-    q = q_ref[0].astype(jnp.float32)
-    k = ks_ref[0, 0].astype(jnp.float32)
-    valid = valid_ref[0, 0] != 0  # (block_c,)
+    q = q_ref[0].astype(jnp.float32).reshape(rows, q_ref.shape[-1])
+    k = k_ref[0].astype(jnp.float32)  # (tile, D)
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    ) * scale
-    s = jnp.where(valid[None, :], s, _NEG_INF)
+    ) * scale  # (G*block_q, tile)
+    # Per-query-head stripe validity of this tile slot: (G, tile) -> rows.
+    vld = valid_ref[0, :, 0] != 0
+    ok = jnp.broadcast_to(vld[:, None, :], (g, block_q, vld.shape[-1]))
+    ok = ok.reshape(rows, vld.shape[-1])
+    s = jnp.where(ok, s, _NEG_INF)
     m_prev = ms_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
     p = jnp.exp(s - m_new)
-    p = jnp.where(valid[None, :], p, 0.0)
-    # Varlen padding rows resume from m0 == -1e30 with all-invalid tiles;
+    p = jnp.where(ok, p, 0.0)
+    # Varlen padding rows resume from m0 == -1e30 with all-invalid slots;
     # without this guard exp(s - m_new) above is exp(0) = 1 there.
     p = jnp.where(s <= _NEG_INF, 0.0, p)
     alpha = jnp.exp(m_prev - m_new)
     ls_ref[...] = ls_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
     accs_ref[...] = accs_ref[...] * alpha + jax.lax.dot_general(
-        p, vs_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
     ms_ref[...] = m_new
@@ -64,78 +75,105 @@ def _sparse_kernel(
     def _finish():
         # l >= 1 for causal rows (anchor stats include the diagonal); the
         # guard only protects varlen padding rows with empty statistics.
-        o_ref[0] = (
-            accs_ref[...] / jnp.maximum(ls_ref[...], 1e-30)
-        ).astype(o_ref.dtype)
+        out = accs_ref[...] / jnp.maximum(ls_ref[...], 1e-30)
+        o_ref[0] = out.reshape(g, block_q, accs_ref.shape[-1]).astype(
+            o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "block_c", "interpret"))
 def sparse_attention_pallas(
     q: jnp.ndarray,
-    k_sel: jnp.ndarray,
-    v_sel: jnp.ndarray,
-    valid: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    tables: StripeIndex,
     m0: jnp.ndarray,
     l0: jnp.ndarray,
     acc0: jnp.ndarray,
     cfg: AnchorConfig,
-    block_c: int = 128,
+    block_c: int | None = None,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Alg. 3 for batched heads.
+    """Alg. 3 for batched heads, index-driven.
 
     Args:
-      q: (B, H, N, D) queries.
-      k_sel, v_sel: (B, H, T_s, C, D) gathered stripe tiles (C % block_c == 0).
-      valid: (B, H, T_s, C) int32 slot validity.
-      m0, l0: (B, H, N) anchor statistics;  acc0: (B, H, N, D).
+      q: (B, Hq, N, D) queries.
+      k, v: (B, Hkv, Nk, D/Dv) — the ORIGINAL key/value arrays (``Nk``
+        may exceed N, e.g. a cache view under chunked prefill).
+      tables: :class:`StripeIndex` over the ``Nk`` axis (tile must
+        divide Nk).
+      m0, l0: (B, Hq, N) anchor statistics;  acc0: (B, Hq, N, Dv).
+      block_c: accepted for signature parity; the DMA tile width is
+        fixed by ``tables``.
 
     Returns:
-      (B, H, N, D) final attention output (``acc/l``) in q.dtype.
+      (B, Hq, N, Dv) final attention output (``acc/l``) in q.dtype.
     """
-    batch, h, n, d = q.shape
-    t_s, cap = k_sel.shape[2], k_sel.shape[3]
+    del block_c
+    batch, hq, n, d = q.shape
+    hkv, nk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    tile = tables.tile
+    t_s, c_t = tables.tile_idx.shape[2], tables.tile_idx.shape[3]
     t_m = cfg.num_q_blocks(n)
     scale = 1.0 / (d ** 0.5)
-    assert cap % block_c == 0, (cap, block_c)
+    assert nk % tile == 0, (nk, tile)
 
-    qf = q.reshape(batch * h, n, d)
-    ksf = k_sel.reshape(batch * h, t_s, cap, d)
-    vsf = v_sel.reshape(batch * h, t_s, cap, d)
-    vf = valid.reshape(batch * h, t_s, cap)
-    m0f = m0.reshape(batch * h, n)
-    l0f = l0.reshape(batch * h, n)
-    acc0f = acc0.reshape(batch * h, n, d)
+    qf = q.reshape(batch * hkv, g, n, d)
+    kf = k.reshape(batch * hkv, nk, d)
+    vf = v.reshape(batch * hkv, nk, dv)
+    validf = tables.valid.reshape(batch * hkv, g, t_s, c_t * tile)
+    m0f = m0.reshape(batch * hkv, g, n)
+    l0f = l0.reshape(batch * hkv, g, n)
+    acc0f = acc0.reshape(batch * hkv, g, n, dv)
+    idxf = tables.tile_idx.reshape(batch * hkv, t_s, c_t).astype(jnp.int32)
 
-    def sel_index(b, i, c):
-        return b, i // cfg.step, c, 0
+    def q_index(bh, i, c, idx_ref):
+        del c, idx_ref
+        return bh, 0, i, 0
 
-    kernel = functools.partial(_sparse_kernel, scale=scale)
+    def kv_index(bh, i, c, idx_ref):
+        return bh, idx_ref[bh, i // cfg.step, c], 0
+
+    def stat_index(bh, i, c, idx_ref):
+        del c, idx_ref
+        return bh, 0, i
+
+    def valid_index(bh, i, c, idx_ref):
+        del idx_ref
+        return bh, 0, i // cfg.step, c
+
+    kernel = functools.partial(
+        _sparse_kernel, scale=scale, g=g, block_q=cfg.block_q)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(batch * hkv, t_m, c_t),
+        in_specs=[
+            pl.BlockSpec((1, g, cfg.block_q, d), q_index),
+            pl.BlockSpec((1, tile, d), kv_index),
+            pl.BlockSpec((1, tile, dv), kv_index),
+            pl.BlockSpec((1, g, 1, tile), valid_index),
+            pl.BlockSpec((1, g, cfg.block_q), stat_index),
+            pl.BlockSpec((1, g, cfg.block_q), stat_index),
+            pl.BlockSpec((1, g, cfg.block_q, dv), q_index),
+        ],
+        out_specs=pl.BlockSpec((1, g, cfg.block_q, dv), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((g * cfg.block_q, 1), jnp.float32),
+            pltpu.VMEM((g * cfg.block_q, 1), jnp.float32),
+            pltpu.VMEM((g * cfg.block_q, dv), jnp.float32),
+        ],
+    )
     out = pl.pallas_call(
         kernel,
-        grid=(batch * h, t_m, cap // block_c),
-        in_specs=[
-            pl.BlockSpec((1, cfg.block_q, d), lambda b, i, c: (b, i, 0)),
-            pl.BlockSpec((1, 1, block_c, d), sel_index),
-            pl.BlockSpec((1, 1, block_c, d), sel_index),
-            pl.BlockSpec((1, 1, block_c), lambda b, i, c: (b, i // cfg.step, c)),
-            pl.BlockSpec((1, cfg.block_q), lambda b, i, c: (b, i)),
-            pl.BlockSpec((1, cfg.block_q), lambda b, i, c: (b, i)),
-            pl.BlockSpec((1, cfg.block_q, d), lambda b, i, c: (b, i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, cfg.block_q, d), lambda b, i, c: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((batch * h, n, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((cfg.block_q, 1), jnp.float32),
-            pltpu.VMEM((cfg.block_q, 1), jnp.float32),
-            pltpu.VMEM((cfg.block_q, d), jnp.float32),
-        ],
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((batch * hkv, g, n, dv), q.dtype),
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(qf, ksf, vsf, vf, m0f, l0f, acc0f)
-    return out.reshape(batch, h, n, d)
+    )(idxf, qf, kf, vf, validf, m0f, l0f, acc0f)
+    return out.reshape(batch, hq, n, dv)
 
 
 dispatch.register("sparse_attention", "pallas_interpret")(

@@ -22,6 +22,7 @@ from jax.experimental import pallas as pl
 from repro.compat import tpu_compiler_params
 from repro.core.config import AnchorConfig
 from repro.kernels import dispatch
+from repro.kernels.indexing import kv_head_index
 
 
 def _select_kernel(qm_ref, mb_ref, k_ref, len_ref, o_ref,
@@ -76,7 +77,6 @@ def stripe_select_pallas(
     """
     batch, hq, t_m, d = q_mean.shape
     hkv = k.shape[1]
-    group = hq // hkv
     n = k.shape[2]
     t_n = cfg.num_kv_blocks(n)
     t_s = cfg.num_superblocks(n)
@@ -99,7 +99,7 @@ def stripe_select_pallas(
 
     def kv_index(b, s, j):
         del s
-        return (b // hq) * hkv + (b % hq) // group, j, 0
+        return kv_head_index(b, hq, hkv), j, 0
 
     kernel = functools.partial(_select_kernel, cfg=cfg, scale=scale, t_n=t_n)
     out = pl.pallas_call(

@@ -4,9 +4,16 @@ Batched, kernel-compatible signatures: each function here is registered as
 the ``"xla"`` backend of the op whose Pallas twin lives in this package, so
 ``dispatch.lookup(op, "xla")`` and ``dispatch.lookup(op, "pallas_*")`` are
 drop-in replacements for one another.  Where the repo already ships a
-production XLA path (blockwise attention, the static-capacity anchor
-pipeline in :mod:`repro.core.anchor_attention`) these delegate to it; the
-remaining ops are implemented here with the same math as their kernels.
+production XLA path (blockwise attention, chunked SSD) these delegate to
+it; the remaining ops are implemented here with the same math as their
+kernels.
+
+All attention ops are GQA-group-native: K/V stay at ``Hkv`` width
+end-to-end (group-batched ``(B, Hkv, G, ...)`` einsums; no
+``jnp.repeat`` expansion), and the sparse stage is index-driven — it
+gathers one discrete KV tile per scan step from the original arrays
+instead of materializing ``(B, Hq, T_s, capacity, D)`` copies
+(DESIGN.md §3).
 
 Imports of :mod:`repro.models` / :mod:`repro.core.anchor_attention` are
 lazy (inside the functions) to keep the kernels package importable without
@@ -22,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.core.config import AnchorConfig
 from repro.kernels import dispatch
+from repro.kernels.indexing import StripeIndex
 
 _NEG_INF = -1e30
 
@@ -39,7 +47,7 @@ def flash_attention_xla(
 
     ``block_q`` only tiles the Pallas grid; the XLA scan has no query
     blocking, so it is accepted and ignored.  ``lengths`` ((B,) int32,
-    optional) masks a right-padded batch (see :mod:`repro.core.spec`).
+    optional) masks a right-padded batch.
     """
     del block_q
     from repro.models.layers import blockwise_attention
@@ -97,18 +105,27 @@ def anchor_phase_xla(
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Alg. 1 anchor statistics, batched heads — vmapped core implementation.
 
-    With ``lengths`` ((B,) int32), padding keys of a right-padded batch are
-    masked out of the statistics and padded rows emit ``(-1e30, 0, 0)``.
+    GQA (Hkv < Hq) vmaps the query-group axis with K/V *broadcast* (no
+    ``jnp.repeat`` expansion).  With ``lengths`` ((B,) int32), padding
+    keys of a right-padded batch are masked out of the statistics and
+    padded rows emit ``(-1e30, 0, 0)``.
     """
     from repro.core.anchor_attention import anchor_phase
 
-    hq, hkv = q.shape[1], k.shape[1]
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    batch_len = 0 if lengths is not None else None
     if hkv != hq:
-        rep = hq // hkv
-        k = jnp.repeat(k, rep, axis=1)
-        v = jnp.repeat(v, rep, axis=1)
+        qg = q.reshape(b, hkv, hq // hkv, n, d)
+        per_group = jax.vmap(anchor_phase, in_axes=(0, None, None, None, None))
+        fn = jax.vmap(jax.vmap(per_group, in_axes=(0, 0, 0, None, None)),
+                      in_axes=(0, 0, 0, None, batch_len))
+        state = fn(qg, k, v, cfg, lengths)
+        shape = (b, hq, n)
+        return (state.m.reshape(shape), state.l.reshape(shape),
+                state.acc.reshape(b, hq, n, -1))
     fn = jax.vmap(jax.vmap(anchor_phase, in_axes=(0, 0, 0, None, None)),
-                  in_axes=(0, 0, 0, None, 0 if lengths is not None else None))
+                  in_axes=(0, 0, 0, None, batch_len))
     state = fn(q, k, v, cfg, lengths)
     return state.m, state.l, state.acc
 
@@ -127,19 +144,23 @@ def stripe_select_xla(
     """Alg. 2 stripe hit-mask from pooled inputs — same contract as the kernel.
 
     q_mean: (B, Hq, T_m, D); m_bar: (B, Hq, T_m); k: (B, Hkv, N, D).
-    Returns (B, Hq, T_s, N) int32.  With ``lengths`` ((B,) int32), keys at
-    positions >= length are never selected.
+    Returns (B, Hq, T_s, N) int32.  The identification scores are a
+    group-batched einsum at Hkv width (no K replication).  With
+    ``lengths`` ((B,) int32), keys at positions >= length are never
+    selected.
     """
     batch, hq, t_m, d = q_mean.shape
     hkv, n = k.shape[1], k.shape[2]
     t_s = cfg.num_superblocks(n)
     scale = 1.0 / (d ** 0.5)
+    kf = k.astype(jnp.float32)
     if hkv != hq:
-        k = jnp.repeat(k, hq // hkv, axis=1)
-
-    s = jnp.einsum(
-        "bhmd,bhnd->bhmn", q_mean.astype(jnp.float32), k.astype(jnp.float32)
-    ) * scale
+        qg = q_mean.reshape(batch, hkv, hq // hkv, t_m, d).astype(jnp.float32)
+        s = jnp.einsum("bkgmd,bknd->bkgmn", qg, kf) * scale
+        s = s.reshape(batch, hq, t_m, n)
+    else:
+        s = jnp.einsum("bhmd,bhnd->bhmn", q_mean.astype(jnp.float32), kf
+                       ) * scale
     hit = (m_bar.astype(jnp.float32)[..., None] - s) <= cfg.theta
 
     pad = t_s * cfg.step - t_m
@@ -162,74 +183,159 @@ def stripe_select_xla(
 dispatch.register("stripe_select", "xla")(stripe_select_xla)
 
 
+def _scan_body(carry, inp, qb, scale):
+    """One tile-slot update of the shared online-softmax resume scan.
+
+    Superblock-major: qb is (B, Hkv, G, T_s, step*block_q, D) f32 (all
+    query rows of a superblock against its one tile — the tile is never
+    duplicated across query blocks); ``inp`` is one slot's
+    ``(kt, vt, vld)`` — the (B, Hkv, T_s, tile, D/Dv) KV tile and the
+    per-query-head validity (B, Hkv, G, T_s, tile).  Slots with no valid
+    rows are *exact* no-ops (alpha == 1, zero mass), which is what keeps
+    padded-length invariance and the GQA union-table layout bit-stable
+    per head.
+    """
+    m, l, acc = carry
+    kt, vt, vld = inp
+    ktm = kt.astype(jnp.float32)  # (B, Hkv, T_s, tile, D)
+    vtm = vt.astype(jnp.float32)
+    ok = (vld != 0)[:, :, :, :, None, :]
+    s = jnp.einsum("bkgsqd,bkstd->bkgsqt", qb, ktm) * scale
+    s = jnp.where(ok, s, _NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(ok, p, 0.0)
+    # Varlen padding rows resume from m0 == -1e30 with all-invalid
+    # slots; the guards keep them at exactly zero mass.
+    p = jnp.where(s <= _NEG_INF, 0.0, p)
+    alpha = jnp.exp(m - m_new)
+    l = l * alpha + jnp.sum(p, axis=-1)
+    acc = acc * alpha[..., None] + jnp.einsum("bkgsqt,bkstd->bkgsqd", p, vtm)
+    return m_new, l, acc
+
+
+def _superblock_major(x, b, hkv, g, t_s, step_q, fill):
+    """(B, Hq, N, ...) -> (B, Hkv, G, T_s, step_q, ...), padding the
+    ragged last superblock's rows with ``fill`` (sliced off afterwards;
+    the pad rows' statistics start at (-1e30, 0, 0) so they stay NaN-free
+    through the scan)."""
+    n = x.shape[2]
+    pad = t_s * step_q - n
+    if pad:
+        widths = [(0, 0), (0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 3)
+        x = jnp.pad(x, widths, constant_values=fill)
+    return x.reshape(b, hkv, g, t_s, step_q, *x.shape[3:])
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "block_c"))
 def sparse_attention_xla(
     q: jnp.ndarray,
-    k_sel: jnp.ndarray,
-    v_sel: jnp.ndarray,
-    valid: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    tables: StripeIndex,
     m0: jnp.ndarray,
     l0: jnp.ndarray,
     acc0: jnp.ndarray,
     cfg: AnchorConfig,
-    block_c: int = 128,
+    block_c: int | None = None,
 ) -> jnp.ndarray:
-    """Alg. 3 resume over gathered stripe tiles (``block_c`` ignored)."""
+    """Alg. 3 resume, index-driven: one Hkv-width tile gather per scan slot.
+
+    The gathered working set is a single (B, Hkv, T_s, tile, D) tile per
+    step — the XLA stand-in for the kernel's scalar-prefetch DMA; nothing
+    Hq-wide and no (B, H, T_s, capacity, D) materialization.  ``block_c``
+    is accepted for signature parity (tile width comes from ``tables``).
+    """
     del block_c
-    batch, h, n, d = q.shape
-    t_m = cfg.num_q_blocks(n)
+    b, hq, n, d = q.shape
+    hkv, nk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    dv = v.shape[-1]
+    tile = tables.tile
+    t_s, c_t = tables.tile_idx.shape[2], tables.tile_idx.shape[3]
+    step_q = cfg.step * cfg.block_q
     scale = 1.0 / (d ** 0.5)
 
-    # Group query blocks onto their superblock's gathered tiles.
-    sidx = jnp.arange(t_m) // cfg.step
-    qb = q.reshape(batch, h, t_m, cfg.block_q, d).astype(jnp.float32)
-    ks = k_sel[:, :, sidx].astype(jnp.float32)  # (B, H, T_m, C, D)
-    vs = v_sel[:, :, sidx].astype(jnp.float32)
-    ok = valid[:, :, sidx] != 0  # (B, H, T_m, C)
+    qb = _superblock_major(q.astype(jnp.float32), b, hkv, g, t_s, step_q, 0.0)
+    kb = k.reshape(b, hkv, nk // tile, tile, d)
+    vb = v.reshape(b, hkv, nk // tile, tile, dv)
+    m = _superblock_major(m0, b, hkv, g, t_s, step_q, _NEG_INF)
+    l = _superblock_major(l0, b, hkv, g, t_s, step_q, 0.0)
+    acc = _superblock_major(acc0, b, hkv, g, t_s, step_q, 0.0)
 
-    s = jnp.einsum("bhiqd,bhicd->bhiqc", qb, ks) * scale
-    s = jnp.where(ok[:, :, :, None, :], s, _NEG_INF)
+    gather = jax.vmap(jax.vmap(lambda kv_b, ti: kv_b[ti]))  # over (B, Hkv)
 
-    m0b = m0.reshape(batch, h, t_m, cfg.block_q)
-    l0b = l0.reshape(batch, h, t_m, cfg.block_q)
-    acc0b = acc0.reshape(batch, h, t_m, cfg.block_q, d)
-    m_new = jnp.maximum(m0b, jnp.max(s, axis=-1))
-    p = jnp.exp(s - m_new[..., None])
-    p = jnp.where(ok[:, :, :, None, :], p, 0.0)
-    # Varlen padding rows resume from m0 == -1e30 with all-invalid tiles;
-    # the guards keep them at exactly zero mass (no-ops for causal rows).
-    p = jnp.where(s <= _NEG_INF, 0.0, p)
-    alpha = jnp.exp(m0b - m_new)
-    l_new = l0b * alpha + jnp.sum(p, axis=-1)
-    acc_new = acc0b * alpha[..., None] + jnp.einsum("bhiqc,bhicd->bhiqd", p, vs)
-    out = acc_new / jnp.maximum(l_new, 1e-30)[..., None]
-    return out.reshape(batch, h, n, d).astype(q.dtype)
+    def slot_inputs(c):
+        tidx = jax.lax.dynamic_index_in_dim(
+            tables.tile_idx, c, axis=-1, keepdims=False)  # (B, Hkv, T_s)
+        kt = gather(kb, tidx)  # (B, Hkv, T_s, tile, D)
+        vt = gather(vb, tidx)
+        vld = jax.lax.dynamic_slice_in_dim(
+            tables.valid, c * tile, tile, axis=-1
+        ).reshape(b, hkv, g, t_s, tile)
+        return kt, vt, vld
+
+    # Scan over slot *indices*; the Hkv-width gather happens inside each
+    # step, so only one tile per (B, Hkv, T_s) is ever live — the XLA
+    # analogue of the kernel's per-step scalar-prefetch DMA.
+    def step(carry, c):
+        return _scan_body(carry, slot_inputs(c), qb, scale), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m, l, acc), jnp.arange(c_t, dtype=jnp.int32))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.reshape(b, hq, t_s * step_q, dv)[:, :, :n]
+    return out.astype(q.dtype)
 
 
 dispatch.register("sparse_attention", "xla")(sparse_attention_xla)
 
 
-@dispatch.register("anchor_attention", "xla")
-def anchor_attention_xla(
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def sparse_attention_gathered(
     q: jnp.ndarray,
-    k: jnp.ndarray,
-    v: jnp.ndarray,
+    k_sel: jnp.ndarray,
+    v_sel: jnp.ndarray,
+    tables: StripeIndex,
+    m0: jnp.ndarray,
+    l0: jnp.ndarray,
+    acc0: jnp.ndarray,
     cfg: AnchorConfig,
-    block_c: int = 128,
-    return_stats: bool = False,
-    lengths: jnp.ndarray | None = None,
-):
-    """Full AnchorAttention — the production static-capacity XLA pipeline.
+) -> jnp.ndarray:
+    """Gather-based twin of :func:`sparse_attention_xla`.
 
-    ``block_c`` is the Pallas capacity tile; the XLA path picks its own
-    sparse-phase chunking, so it is accepted and ignored.  ``lengths``
-    ((B,) int32, optional) masks a right-padded batch.
+    Consumes pre-materialized (B, Hkv, T_s, C, D) tiles (from
+    :func:`repro.kernels.indexing.gather_stripe_tiles`) and runs the
+    identical tile-slot scan — the baseline for the index-vs-gather
+    benchmark and the bit-exactness tests (same values, same op order ⇒
+    bit-identical results; only the HBM footprint differs).
     """
-    del block_c
-    from repro.core.anchor_attention import anchor_attention
+    b, hq, n, d = q.shape
+    hkv = k_sel.shape[1]
+    g = hq // hkv
+    dv = v_sel.shape[-1]
+    tile = tables.tile
+    t_s, c_t = tables.tile_idx.shape[2], tables.tile_idx.shape[3]
+    step_q = cfg.step * cfg.block_q
+    scale = 1.0 / (d ** 0.5)
 
-    return anchor_attention(q, k, v, cfg, return_stats=return_stats,
-                            lengths=lengths)
+    qb = _superblock_major(q.astype(jnp.float32), b, hkv, g, t_s, step_q, 0.0)
+    m = _superblock_major(m0, b, hkv, g, t_s, step_q, _NEG_INF)
+    l = _superblock_major(l0, b, hkv, g, t_s, step_q, 0.0)
+    acc = _superblock_major(acc0, b, hkv, g, t_s, step_q, 0.0)
+
+    kc = jnp.moveaxis(k_sel.reshape(b, hkv, t_s, c_t, tile, d), 3, 0)
+    vc = jnp.moveaxis(v_sel.reshape(b, hkv, t_s, c_t, tile, dv), 3, 0)
+    valc = jnp.moveaxis(
+        tables.valid.reshape(b, hkv, g, t_s, c_t, tile), 4, 0)
+
+    def step(carry, inp):
+        return _scan_body(carry, inp, qb, scale), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m, l, acc), (kc, vc, valc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.reshape(b, hq, t_s * step_q, dv)[:, :, :n]
+    return out.astype(q.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

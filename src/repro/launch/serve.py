@@ -81,6 +81,13 @@ def main() -> None:
     paged_kw = {}
     if args.paged:
         max_len = -(-max_len // args.page_size) * args.page_size
+        if args.chunk_tokens:
+            # Chunk windows are fixed-width and chunk-aligned; the engine
+            # rejects a max_len that is not a chunk multiple (a clamped
+            # final window would clobber history K/V).  chunk_tokens is
+            # validated to be a page multiple, so this keeps page
+            # alignment too.
+            max_len = -(-max_len // args.chunk_tokens) * args.chunk_tokens
         paged_kw = dict(
             cache_layout="paged",
             page_size=args.page_size,

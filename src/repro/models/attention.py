@@ -192,14 +192,25 @@ def gqa_chunk_apply(
     cache: Params,
     cfg: ModelConfig,
     pos: jnp.ndarray,
+    spec: AttentionSpec | None = None,
+    live: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, Params]:
     """Chunked-prefill attention: a C-token chunk against dense cache
     views that already hold positions ``[0, pos)`` of each sequence.
+    ``live`` (() int32) counts the real rows of a zero-padded final
+    chunk (forwarded to the sparse path's pooled statistics).
 
     x: (B, C, d); cache leaves: (B, Hkv, S, hd) gathered views (see
     :func:`repro.models.cache.gather_pages`).  Writes the chunk's K/V at
     ``[pos, pos + C)`` and attends each row to history + its causal
     prefix of the chunk.
+
+    With an ``anchor`` ``spec`` (and a superblock-aligned chunk/``pos``,
+    which the serving engine guarantees), the chunk runs the index-driven
+    sparse path — :func:`repro.kernels.ops.chunk_anchor_attention` — so
+    chunked long prompts keep AnchorAttention prefill instead of falling
+    back to dense history attention.  Otherwise: dense
+    :func:`repro.models.layers.chunk_attention`.
     """
     b, c, _ = x.shape
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -217,7 +228,16 @@ def gqa_chunk_apply(
         cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0))
     v_cache = jax.lax.dynamic_update_slice(
         cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0))
-    out = chunk_attention(q, k_cache, v_cache, pos)
+    sparse = (spec is not None and spec.algorithm == "anchor"
+              and c % spec.anchor.superblock_q() == 0)
+    if sparse:
+        from repro.kernels import ops as kernel_ops
+
+        out = kernel_ops.chunk_anchor_attention(
+            q, k_cache, v_cache, pos, spec.anchor, live=live,
+            backend=spec.backend)
+    else:
+        out = chunk_attention(q, k_cache, v_cache, pos)
     out = jnp.swapaxes(out, 1, 2).reshape(b, c, h * hd)
     return out @ p["wo"], {"k": k_cache, "v": v_cache}
 

@@ -100,10 +100,7 @@ def blockwise_attention(
     b, hq, n, d = q.shape
     hkv, s = k.shape[1], k.shape[2]
     dv = v.shape[-1]  # may differ from d (MLA)
-    if hkv != hq:
-        rep = hq // hkv
-        k = jnp.repeat(k, rep, axis=1)
-        v = jnp.repeat(v, rep, axis=1)
+    g = hq // hkv  # group-batched einsums keep K/V at Hkv width (no repeat)
     scale = 1.0 / (d ** 0.5)
     if s % block_kv:
         pad = block_kv - s % block_kv
@@ -113,24 +110,24 @@ def blockwise_attention(
     else:
         s_pad = s
     nblk = s_pad // block_kv
-    kb = jnp.moveaxis(k.reshape(b, hq, nblk, block_kv, d), 2, 0)
-    vb = jnp.moveaxis(v.reshape(b, hq, nblk, block_kv, dv), 2, 0)
-    qf = q.astype(jnp.float32)
+    kb = jnp.moveaxis(k.reshape(b, hkv, nblk, block_kv, d), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, hkv, nblk, block_kv, dv), 2, 0)
+    qf = q.reshape(b, hkv, g, n, d).astype(jnp.float32)
     rows = jnp.arange(n)
 
     def step(carry, inp):
         m, l, acc, j = carry
         kj, vj = inp
-        sc = jnp.einsum("bhqd,bhkd->bhqk", qf, kj.astype(jnp.float32)) * scale
+        sc = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kj.astype(jnp.float32)) * scale
         cols = j * block_kv + jnp.arange(block_kv)
         valid = cols[None, :] < s
         if causal:
             valid = valid & (cols[None, :] <= rows[:, None])
-        valid = valid[None, None]  # (1, 1, N, block) or (1, 1, 1, block)
+        valid = valid[None, None, None]  # (1, 1, 1, N, blk) or (1, 1, 1, 1, blk)
         if lengths is not None:
-            lb = lengths[:, None, None, None]
-            valid = valid & (cols[None, None, None, :] < lb) & (
-                rows[None, None, :, None] < lb)
+            lb = lengths[:, None, None, None, None]
+            valid = valid & (cols[None, None, None, None, :] < lb) & (
+                rows[None, None, None, :, None] < lb)
         sc = jnp.where(valid, sc, _NEG_INF)
         m_new = jnp.maximum(m, sc.max(-1))
         p = jnp.exp(sc - m_new[..., None])
@@ -138,17 +135,18 @@ def blockwise_attention(
         alpha = jnp.exp(m - m_new)
         l = l * alpha + p.sum(-1)
         acc = acc * alpha[..., None] + jnp.einsum(
-            "bhqk,bhkd->bhqd", p, vj.astype(jnp.float32))
+            "bhgqk,bhkd->bhgqd", p, vj.astype(jnp.float32))
         return (m_new, l, acc, j + 1), None
 
     init = (
-        jnp.full((b, hq, n), _NEG_INF, jnp.float32),
-        jnp.zeros((b, hq, n), jnp.float32),
-        jnp.zeros((b, hq, n, dv), jnp.float32),
+        jnp.full((b, hkv, g, n), _NEG_INF, jnp.float32),
+        jnp.zeros((b, hkv, g, n), jnp.float32),
+        jnp.zeros((b, hkv, g, n, dv), jnp.float32),
         jnp.asarray(0, jnp.int32),
     )
     (m, l, acc, _), _ = jax.lax.scan(step, init, (kb, vb))
-    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, n, dv).astype(q.dtype)
 
 
 def chunk_attention(
@@ -170,19 +168,16 @@ def chunk_attention(
     """
     b, hq, c, d = q.shape
     hkv, s = k_cache.shape[1], k_cache.shape[2]
-    if hkv != hq:
-        rep = hq // hkv
-        k_cache = jnp.repeat(k_cache, rep, axis=1)
-        v_cache = jnp.repeat(v_cache, rep, axis=1)
+    g = hq // hkv
     scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, g, c, d).astype(jnp.float32)
     sc = jnp.einsum(
-        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k_cache.astype(jnp.float32)
-    ) * scale
+        "bhgqd,bhkd->bhgqk", qg, k_cache.astype(jnp.float32)) * scale
     valid = jnp.arange(s)[None, :] <= pos + jnp.arange(c)[:, None]  # (C, S)
-    sc = jnp.where(valid[None, None], sc, _NEG_INF)
+    sc = jnp.where(valid[None, None, None], sc, _NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
-    out = jnp.einsum("bhqk,bhkd->bhqd", p, v_cache.astype(jnp.float32))
-    return out.astype(q.dtype)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, c, -1).astype(q.dtype)
 
 
 def decode_attention(
@@ -198,16 +193,13 @@ def decode_attention(
     """
     b, hq, _, d = q.shape
     hkv, s = k_cache.shape[1], k_cache.shape[2]
-    if hkv != hq:
-        rep = hq // hkv
-        k_cache = jnp.repeat(k_cache, rep, axis=1)
-        v_cache = jnp.repeat(v_cache, rep, axis=1)
+    g = hq // hkv
     scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, g, 1, d).astype(jnp.float32)
     sc = jnp.einsum(
-        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k_cache.astype(jnp.float32)
-    ) * scale
-    valid = jnp.arange(s)[None, None, None, :] < cache_len
+        "bhgqd,bhkd->bhgqk", qg, k_cache.astype(jnp.float32)) * scale
+    valid = jnp.arange(s)[None, None, None, None, :] < cache_len
     sc = jnp.where(valid, sc, _NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
-    out = jnp.einsum("bhqk,bhkd->bhqd", p, v_cache.astype(jnp.float32))
-    return out.astype(q.dtype)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, 1, -1).astype(q.dtype)

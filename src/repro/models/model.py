@@ -224,6 +224,8 @@ def prefill_chunk(
     cache: Params,
     cfg: ModelConfig,
     pos: jnp.ndarray,
+    spec: AttentionSpec | None = None,
+    live: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, Params]:
     """One chunk of a chunked prefill.  tokens: (B, C) int32; ``cache``
     holds dense per-sequence views already containing ``[0, pos)``.
@@ -231,11 +233,14 @@ def prefill_chunk(
     Returns (logits (B, C, V) — the caller reads the row of its last
     valid chunk token — and the updated cache views with the chunk's K/V
     written at ``[pos, pos + C)``).  GQA-attention-only; see
-    :func:`transformer.stack_chunk_prefill`.
+    :func:`transformer.stack_chunk_prefill`.  An ``anchor`` ``spec``
+    keeps the chunk on the index-driven sparse path (superblock-aligned
+    chunks); ``None``/dense runs dense history attention.  ``live``
+    (() int32) is the real-token count of a zero-padded final chunk.
     """
     x = jnp.take(params["embed"], tokens, axis=0)
     x, new_cache = transformer.stack_chunk_prefill(
-        x, params["blocks"], cache, cfg, pos)
+        x, params["blocks"], cache, cfg, pos, spec=spec, live=live)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     return _logits(x, params), new_cache
 

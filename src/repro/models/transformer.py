@@ -316,6 +316,8 @@ def stack_chunk_prefill(
     cache: Params,
     cfg: ModelConfig,
     pos: jnp.ndarray,
+    spec: AttentionSpec | None = None,
+    live: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, Params]:
     """Chunked prefill: one C-token chunk through the stack with history.
 
@@ -326,6 +328,12 @@ def stack_chunk_prefill(
     updated cache).  Attention-only (GQA) architectures — recurrent-state
     mixers would need their scan state threaded chunk-to-chunk, and those
     archs keep the dense one-shot path.
+
+    ``spec`` picks the chunk attention math: an ``anchor`` spec runs the
+    index-driven sparse chunk path (superblock-aligned chunks only — the
+    serving engine enforces the alignment); ``None``/dense runs dense
+    history attention.  ``live`` (() int32, optional) is the real-row
+    count of a zero-padded final chunk.
     """
     layout = cfg.group_layout()
     if cfg.use_mla or any(mixer != "attn" for mixer, _ in layout):
@@ -338,7 +346,8 @@ def stack_chunk_prefill(
         for i, (mixer, ffn) in enumerate(layout):
             p = gp[f"l{i}"]
             h = rmsnorm(x, p["norm_mixer"], cfg.norm_eps)
-            h, nc = attn_lib.gqa_chunk_apply(h, p["attn"], gc[f"l{i}"], cfg, pos)
+            h, nc = attn_lib.gqa_chunk_apply(
+                h, p["attn"], gc[f"l{i}"], cfg, pos, spec=spec, live=live)
             new_gc[f"l{i}"] = nc
             x = x + h
             if ffn != "none":

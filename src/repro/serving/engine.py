@@ -27,10 +27,16 @@ Two KV-cache layouts (``cache_layout=``, see :mod:`repro.models.cache`):
 Chunked prefill (``chunk_tokens=``, paged layout): prompts longer than
 the threshold prefill in superblock/page-aligned chunks, one chunk per
 engine step, interleaved with decode — a single 128k prompt no longer
-head-of-line-blocks the decode batch.  Chunks run dense history
-attention (:func:`repro.models.transformer.stack_chunk_prefill`); pages
-already covered by a prefix hit are skipped, so a shared system prompt
-is never recomputed on this path.
+head-of-line-blocks the decode batch.  Chunks run the engine's own
+attention algorithm (:func:`repro.models.transformer.
+stack_chunk_prefill`): under an anchor spec each chunk goes through the
+index-driven sparse entry point
+(:func:`repro.kernels.ops.chunk_anchor_attention`) against its gathered
+cache view — long prompts keep AnchorAttention prefill instead of
+falling back to dense history attention (counted in
+``stats["sparse_chunks"]``); dense specs keep the dense chunk path.
+Pages already covered by a prefix hit are skipped, so a shared system
+prompt is never recomputed on this path.
 
 Variable-length prefill: attention-only architectures right-pad any mix
 of prompt lengths up to the next AnchorAttention superblock boundary and
@@ -144,6 +150,7 @@ class ServingEngine:
             "shared_pages": 0,
             "chunked_prefills": 0,
             "prefill_chunks": 0,
+            "sparse_chunks": 0,
             "preemptions": 0,
             "cow_copies": 0,
             "prefix_evictions": 0,
@@ -168,8 +175,14 @@ class ServingEngine:
             lambda p, c, t, pos, act, pt: model_lib.decode_step(
                 p, c, t, pos, cfg, active=act, page_tables=pt,
                 kv_backend=kv_backend))
+        # Chunked prefill runs the engine's own attention algorithm: an
+        # anchor spec keeps chunks on the index-driven sparse path
+        # (chunk_tokens is validated superblock-aligned at init, and
+        # chunk starts are chunk-aligned), dense stays dense.
+        chunk_spec = self.spec
         self._chunk = jax.jit(
-            lambda p, t, c, pos: model_lib.prefill_chunk(p, t, c, cfg, pos))
+            lambda p, t, c, pos, live: model_lib.prefill_chunk(
+                p, t, c, cfg, pos, spec=chunk_spec, live=live))
         self._admit_clock = 0  # admission order, for youngest-first preemption
         self._slot_tick = np.zeros(max_batch, np.int64)
         self._slot_plen = np.zeros(max_batch, np.int64)  # prompt length
@@ -294,17 +307,21 @@ class ServingEngine:
         Anchor is bitwise invariant to the padded wave length on xla
         (tested), so one tag per algorithm suffices:
 
+        * chunked prompts — ``"chunked"`` (checked FIRST: with chunking
+          on, a long prompt always chunks — under an anchor spec the
+          chunks run the index-driven sparse path, so prompts whose
+          padded length exceeds ``max_len`` no longer fall back to a
+          dense one-shot prefill),
         * normal waves — the engine's spec algorithm,
-        * chunked prompts — ``"chunked"`` (dense history attention),
         * dense-fallback anomaly waves — ``None``: no sharing; they are
           admitted as singleton waves so they never drag an anchor wave
           to dense.
         """
+        if self.chunk_tokens is not None and n_tokens > self.chunk_tokens:
+            return "chunked"
         if (self.spec.algorithm == "anchor"
                 and self.spec.anchor.prefill_pad_len(n_tokens) > self.max_len):
             return None
-        if self.chunk_tokens is not None and n_tokens > self.chunk_tokens:
-            return "chunked"
         return self.spec.algorithm
 
     def _admit_paged(self, free: list[int]) -> None:
@@ -496,7 +513,8 @@ class ServingEngine:
         pt_row = jnp.asarray(self._pt[slot:slot + 1])
         view = self._gather_view(self.cache, pt_row)
         logits, view = self._chunk(
-            self.params, jnp.asarray(toks), view, jnp.asarray(c0, jnp.int32))
+            self.params, jnp.asarray(toks), view, jnp.asarray(c0, jnp.int32),
+            jnp.asarray(c1 - c0, jnp.int32))
         # Scatter back only this chunk's pages, minus prefix-shared ones
         # and the padding tail.
         prompt_pages = self.pool.pages_for_tokens(len(st.tokens))
@@ -506,6 +524,8 @@ class ServingEngine:
         write[0, lo:hi] = self._pt[slot, lo:hi]
         self.cache = self._scatter_view(self.cache, view, jnp.asarray(write))
         self.stats["prefill_chunks"] += 1
+        if self.spec.algorithm == "anchor":
+            self.stats["sparse_chunks"] += 1
         st.pos = c1
         if c1 < len(st.tokens):
             return

@@ -94,22 +94,23 @@ class TestBackendParity:
             np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-4)
 
     def test_sparse_attention_cross_backend(self):
-        """Direct op parity on synthesized gathered tiles."""
+        """Direct op parity on synthesized index tables (GQA, Hkv < Hq)."""
         cfg = AnchorConfig(block_q=32, block_kv=32, step=2, theta=1e9)
-        b, h, n, d, cap = 1, 2, 128, 16, 64
+        b, hq, hkv, n, d, tile = 1, 4, 2, 128, 16, 32
         t_s = cfg.num_superblocks(n)
         ks = jax.random.split(jax.random.PRNGKey(4), 7)
-        q = jax.random.normal(ks[0], (b, h, n, d))
-        k_sel = jax.random.normal(ks[1], (b, h, t_s, cap, d))
-        v_sel = jax.random.normal(ks[2], (b, h, t_s, cap, d))
-        valid = jax.random.bernoulli(ks[3], 0.7, (b, h, t_s, cap)).astype(
+        q = jax.random.normal(ks[0], (b, hq, n, d))
+        k = jax.random.normal(ks[1], (b, hkv, n, d))
+        v = jax.random.normal(ks[2], (b, hkv, n, d))
+        hit = jax.random.bernoulli(ks[3], 0.3, (b, hq, t_s, n)).astype(
             jnp.int32)
-        m0 = jax.random.normal(ks[4], (b, h, n))
-        l0 = jax.nn.softplus(jax.random.normal(ks[5], (b, h, n))) + 1.0
-        acc0 = jax.random.normal(ks[6], (b, h, n, d))
+        tables, _ = kernel_ops.compact_stripe_tiles(hit, hkv, tile)
+        m0 = jax.random.normal(ks[4], (b, hq, n))
+        l0 = jax.nn.softplus(jax.random.normal(ks[5], (b, hq, n))) + 1.0
+        acc0 = jax.random.normal(ks[6], (b, hq, n, d))
         outs = [
             np.asarray(kernel_ops.sparse_attention(
-                q, k_sel, v_sel, valid, m0, l0, acc0, cfg, block_c=32,
+                q, k, v, tables, m0, l0, acc0, cfg, block_c=tile,
                 backend=be))
             for be in PARITY_BACKENDS
         ]

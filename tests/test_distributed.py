@@ -74,6 +74,30 @@ class TestShardingRules:
         """)
         assert "FLASH_DECODE_OK" in out
 
+    def test_flash_decode_sharded_gqa_fewer_kv_heads_than_shards(self):
+        """Hkv < model-axis size: heads must replicate (group-aligned
+        sharding impossible), not crash — regression for the removed
+        repeat-to-Hq path."""
+        out = _run_subprocess("""
+            from repro.distributed.collectives import flash_decode_sharded
+            from repro.models.layers import decode_attention
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
+            B, HQ, HKV, S, D = 2, 8, 2, 64, 16
+            ks = jax.random.split(jax.random.PRNGKey(0), 3)
+            q = jax.random.normal(ks[0], (B, HQ, 1, D))
+            kc = jax.random.normal(ks[1], (B, HKV, S, D))
+            vc = jax.random.normal(ks[2], (B, HKV, S, D))
+            cache_len = jnp.asarray(40)
+            with mesh:
+                out = jax.jit(lambda q, k, v: flash_decode_sharded(
+                    q, k, v, cache_len, mesh))(q, kc, vc)
+            ref = decode_attention(q, kc, vc, cache_len)
+            np.testing.assert_allclose(
+                np.asarray(out), np.asarray(ref), atol=1e-5)
+            print("FLASH_DECODE_GQA_OK")
+        """)
+        assert "FLASH_DECODE_GQA_OK" in out
+
     def test_moe_shard_map_matches_fallback(self):
         out = _run_subprocess("""
             from repro.configs import get_reduced_config

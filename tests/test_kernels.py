@@ -15,8 +15,9 @@ from repro.kernels import (
     stripe_select,
 )
 
-# The *_pallas aliases are deprecated; these tests exercise the exact
-# kernel code paths through the dispatched names on the interpret backend.
+# These tests exercise the exact kernel code paths through the
+# dispatched names on the interpret backend (the *_pallas aliases were
+# removed after their deprecation cycle).
 PALLAS = "pallas_interpret"
 from repro.kernels.ref import (
     anchor_attention_ref,

@@ -307,6 +307,9 @@ class TestPagedEngineEquivalence:
         snap = chunked.snapshot()
         assert snap["chunked_prefills"] == 1  # only the 90-token prompt
         assert snap["prefill_chunks"] == 2  # ceil(90 / 64)
+        # Anchor-spec chunks run the index-driven sparse path, not the
+        # dense history-attention fallback.
+        assert snap["sparse_chunks"] == 2
 
     def test_chunked_prefill_with_shared_prefix_offset(self, served):
         """Regression: a prefix hit used to offset the chunk start to a

@@ -121,38 +121,13 @@ class TestLegacyShim:
                                anchor=ANCHOR16))
         np.testing.assert_array_equal(np.asarray(legacy), np.asarray(new))
 
-    @pytest.mark.parametrize("alias,args", [
-        ("anchor_phase_pallas", 3),
-        ("stripe_select_pallas", None),
-        ("anchor_attention_pallas", 3),
-    ])
-    def test_pallas_aliases_warn(self, alias, args):
-        q, k, v = _qkv(0, 1, 1, 32, 8)
-        cfg = AnchorConfig(block_q=8, block_kv=8, step=2, theta=2.0)
-        fn = getattr(kernel_ops, alias)
-        with pytest.warns(DeprecationWarning, match="deprecated"):
-            if alias == "stripe_select_pallas":
-                q_mean = jnp.mean(q.reshape(1, 1, 4, 8, 8), axis=3)
-                m_bar = jnp.zeros((1, 1, 4))
-                fn(q_mean, m_bar, k, cfg)
-            else:
-                fn(q, k, v, cfg)
-
-    def test_sparse_attention_pallas_alias_warns(self):
-        cfg = AnchorConfig(block_q=8, block_kv=8, step=2, theta=1e9)
-        b, h, n, d, cap = 1, 1, 32, 8, 8
-        t_s = cfg.num_superblocks(n)
-        ks = jax.random.split(jax.random.PRNGKey(4), 7)
-        q = jax.random.normal(ks[0], (b, h, n, d))
-        k_sel = jax.random.normal(ks[1], (b, h, t_s, cap, d))
-        v_sel = jax.random.normal(ks[2], (b, h, t_s, cap, d))
-        valid = jnp.ones((b, h, t_s, cap), jnp.int32)
-        m0 = jax.random.normal(ks[4], (b, h, n))
-        l0 = jnp.ones((b, h, n))
-        acc0 = jax.random.normal(ks[6], (b, h, n, d))
-        with pytest.warns(DeprecationWarning, match="deprecated"):
-            kernel_ops.sparse_attention_pallas(
-                q, k_sel, v_sel, valid, m0, l0, acc0, cfg, block_c=8)
+    def test_pallas_aliases_removed(self):
+        """The deprecated ``*_pallas`` op aliases (warning since the
+        AttentionSpec release) are gone — the dispatched names with
+        ``backend=`` are the only entry points."""
+        for alias in ("anchor_phase_pallas", "stripe_select_pallas",
+                      "sparse_attention_pallas", "anchor_attention_pallas"):
+            assert not hasattr(kernel_ops, alias), alias
 
 
 class TestCanonicalEntryPoint:
