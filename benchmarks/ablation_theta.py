@@ -8,6 +8,11 @@ across seeds (different "heads") — the anchor-relative threshold adapts,
 the fixed one cannot serve all inputs at once (paper §2.1.1 / Table 4).
 Without-anchor θ is swept over the *negated raw-score* range so both modes
 get their best shot.
+
+Metrics come from the fused identification pipeline's COMPACT tables and
+counts (:func:`repro.core.metrics.compact_selection_metrics`) — the dense
+selection-mask API this benchmark used before the fused rewrite no longer
+exists on the kernel path (DESIGN.md §9).
 """
 
 from __future__ import annotations
@@ -15,11 +20,8 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-import jax.numpy as jnp  # noqa: F811
 from repro.core import AnchorConfig
-from repro.core.baselines import anchor_attention_mask
-from repro.core.masks import anchor_region_mask, candidate_region_mask
-from repro.core.metrics import flops_anchor_attention, mask_recall_sparsity
+from repro.core.metrics import compact_selection_metrics, flops_anchor_attention
 
 from benchmarks.synthetic_attention import structured_qkv
 
@@ -50,17 +52,12 @@ def run(report):
                 block_q=BLOCK, block_kv=BLOCK, step=STEP, theta=theta,
                 use_anchor=use_anchor)
             rs, ss, cs = [], [], []
-            cand = np.asarray(candidate_region_mask(N, cfg))
-            anchor_reg = np.asarray(anchor_region_mask(N, cfg))
             for seed, variant in enumerate(HEAD_VARIANTS):
                 q, k, v, _ = structured_qkv(seed, N, **variant)
-                q, k, v = jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
-                mask = anchor_attention_mask(q, k, v, cfg)
-                r, s = mask_recall_sparsity(q, k, mask)
-                stripe_cells = np.asarray(mask) & ~anchor_reg
-                cand_sparsity = 1.0 - stripe_cells.sum() / max(cand.sum(), 1)
-                rs.append(float(r)), ss.append(float(s))
-                cs.append(float(cand_sparsity))
+                met = compact_selection_metrics(
+                    jnp.asarray(q), jnp.asarray(k), cfg)
+                rs.append(met["recall"]), ss.append(met["sparsity"])
+                cs.append(met["stripe_sparsity"])
             recall, sparsity = np.mean(rs), np.mean(ss)
             cand_sp = np.mean(cs)
             worst_recall = min(rs)

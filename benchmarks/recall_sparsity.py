@@ -4,6 +4,11 @@ Sweeps each method's budget knob on structured synthetic attention and
 reports (recall, sparsity) pairs.  Also reproduces Table 1's
 stripe-vs-block granularity comparison at matched recall, and Fig. 5's
 max-in-anchor-region statistic.
+
+AnchorAttention rows are scored from the fused pipeline's COMPACT tables
+and counts (:func:`repro.core.metrics.compact_selection_metrics`) — no
+dense selection mask (DESIGN.md §9); the baselines keep their dense
+specification-level masks (they have no compact representation).
 """
 
 from __future__ import annotations
@@ -13,12 +18,11 @@ import numpy as np
 
 from repro.core import AnchorConfig
 from repro.core.baselines import (
-    anchor_attention_mask,
     block_topcdf_mask,
     streaming_llm_mask,
     vertical_slash_mask,
 )
-from repro.core.metrics import mask_recall_sparsity
+from repro.core.metrics import compact_selection_metrics, mask_recall_sparsity
 
 from benchmarks.synthetic_attention import max_in_anchor_fraction, structured_qkv
 
@@ -39,6 +43,16 @@ def _avg(fn):
     return float(np.mean(rs)), float(np.mean(ss))
 
 
+def _avg_anchor(cfg):
+    """AnchorAttention rows: compact-table metrics, no dense mask."""
+    rs, ss = [], []
+    for seed in SEEDS:
+        q, k, _, _ = structured_qkv(seed, N)
+        met = compact_selection_metrics(jnp.asarray(q), jnp.asarray(k), cfg)
+        rs.append(met["recall"]), ss.append(met["sparsity"])
+    return float(np.mean(rs)), float(np.mean(ss))
+
+
 def run(report):
     # Fig. 5 statistic: anchors dominate the rowwise maxima.
     fracs = [max_in_anchor_fraction(*structured_qkv(s, N)[:2], 64, 128)
@@ -48,7 +62,7 @@ def run(report):
     # Fig. 6a sweep: anchor (ours) across theta.
     for theta in (1.0, 2.0, 3.0, 4.0, 6.0, 8.0):
         cfg = AnchorConfig(block_q=BLOCK, block_kv=BLOCK, step=STEP, theta=theta)
-        r, s = _avg(lambda q, k, v: anchor_attention_mask(q, k, v, cfg))
+        r, s = _avg_anchor(cfg)
         report(f"anchor_theta{theta:g}_recall", r * 100, f"sparsity={s*100:.1f}%")
 
     # FlexPrefill-like block top-cdf across gamma.
@@ -70,7 +84,7 @@ def run(report):
     # Table 1: stripe vs block granularity at matched recall target.
     # Stripe = anchor selection (col granularity); block = topcdf blocks.
     cfg = AnchorConfig(block_q=BLOCK, block_kv=BLOCK, step=STEP, theta=4.0)
-    r_stripe, s_stripe = _avg(lambda q, k, v: anchor_attention_mask(q, k, v, cfg))
+    r_stripe, s_stripe = _avg_anchor(cfg)
     # Tune gamma to land at ~the same recall, then compare sparsity.
     best = None
     for gamma in (0.8, 0.85, 0.9, 0.95, 0.97, 0.99):

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.masks import causal_mask
+from repro.core.masks import anchor_region_mask, causal_mask
 
 
 def full_attention_probs(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
@@ -45,6 +45,108 @@ def mask_recall_sparsity(
     """Convenience: (recall, sparsity) of a mask for one head."""
     probs = full_attention_probs(q, k)
     return recall(probs, mask), sparsity(mask)
+
+
+def stripe_tables_metrics(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    tables,
+    counts: jnp.ndarray,
+    cfg,
+) -> dict[str, float]:
+    """Recall / sparsity of a COMPACT stripe selection, one head.
+
+    Consumes the fused pipeline's :class:`repro.kernels.indexing.
+    StripeIndex` tables and kept counts directly — the dense ``(T_s,
+    N)`` selection mask of the retired ``anchor_attention_mask`` path is
+    never reconstructed.  Recall gathers full-attention probability
+    mass at the ``O(capacity)`` packed columns per superblock (the
+    anchor region is a fixed, selection-independent mask); sparsity is
+    closed-form from the kept counts.
+
+    Args:
+      q, k: (N, D) single-head tensors.
+      tables: selection-only tables from ``stripe_select`` (B=1, one KV
+        head).
+      counts: (1, 1, T_s) kept-stripe counts.
+      cfg: the :class:`AnchorConfig` that produced the selection.
+
+    Returns:
+      dict with ``recall``, ``sparsity`` (fraction of causal positions
+      not computed), ``stripe_sparsity`` (over the candidate range
+      only), ``selected`` and ``candidates`` position totals.
+    """
+    n = q.shape[0]
+    t_s = cfg.num_superblocks(n)
+    sb_q = cfg.superblock_q()
+    tile = tables.tile
+    probs = full_attention_probs(q, k)
+    anchor = anchor_region_mask(n, cfg) & causal_mask(n)
+    covered = jnp.sum(jnp.where(anchor, probs, 0.0), axis=-1)  # (N,)
+
+    # Stripe coverage straight from the packed slots: gather each
+    # superblock's rows at its packed columns, weight by validity.
+    idx = tables.tile_idx[0, 0]  # (T_s, C)
+    valid = tables.valid[0, 0, 0].astype(jnp.float32)  # (T_s, C*tile)
+    cols = (idx[..., None] * tile + jnp.arange(tile)).reshape(t_s, -1)
+    probs_p = jnp.pad(probs, ((0, t_s * sb_q - n), (0, 0)))
+    pr = probs_p.reshape(t_s, sb_q, n)
+    gathered = jnp.take_along_axis(
+        pr, jnp.broadcast_to(cols[:, None, :], (t_s, sb_q, cols.shape[-1])),
+        axis=2)
+    cov_s = jnp.sum(gathered * valid[:, None, :], axis=-1)  # (T_s, sb_q)
+    covered = covered + cov_s.reshape(-1)[:n]
+    recall_v = jnp.mean(covered)
+
+    from repro.kernels.indexing import window_start_tokens
+
+    rows = jnp.clip(n - jnp.arange(t_s) * sb_q, 0, sb_q)  # rows/superblock
+    count_s = counts[0, 0]
+    stripe_computed = jnp.sum(count_s * rows)
+    anchor_computed = jnp.sum(anchor)
+    causal_total = n * (n + 1) // 2
+    w_start = window_start_tokens(jnp.arange(t_s), cfg)
+    cand_total = jnp.sum(jnp.maximum(w_start - cfg.block_kv, 0) * rows)
+    return {
+        "recall": float(recall_v),
+        "sparsity": float(
+            1.0 - (anchor_computed + stripe_computed) / causal_total),
+        "stripe_sparsity": float(
+            1.0 - stripe_computed / jnp.maximum(cand_total, 1)),
+        "selected": float(stripe_computed),
+        "candidates": float(cand_total),
+    }
+
+
+def compact_selection_metrics(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    cfg,
+    tile: int | None = None,
+    backend: str = "xla",
+) -> dict[str, float]:
+    """Run the fused identification stages for one head and score them.
+
+    The replacement for ``anchor_attention_mask`` + ``mask_recall_
+    sparsity`` in the selection-quality benchmarks: the scores-only
+    anchor phase and the compact stripe selection produce the tables
+    and counts, and :func:`stripe_tables_metrics` derives (recall,
+    sparsity) from them — no dense hit mask anywhere.
+    """
+    from repro.kernels import indexing
+    from repro.kernels import ops as kernel_ops
+
+    n = q.shape[0]
+    if tile is None:
+        tile = indexing.stripe_tile(n, min(128, n))
+    qb = jnp.asarray(q)[None, None]
+    kb = jnp.asarray(k)[None, None]
+    q_mean, m_bar = kernel_ops.anchor_phase(qb, kb, cfg, backend=backend)
+    if not cfg.use_anchor:
+        m_bar = jnp.where(jnp.isinf(m_bar), m_bar, jnp.zeros_like(m_bar))
+    tables, counts = kernel_ops.stripe_select(
+        q_mean, m_bar, kb, cfg, tile, backend=backend)
+    return stripe_tables_metrics(q, k, tables, counts, cfg)
 
 
 def output_recall(out_sparse: jnp.ndarray, out_full: jnp.ndarray, atol: float = 5e-3) -> jnp.ndarray:

@@ -12,12 +12,14 @@ from repro.kernels import dispatch, indexing, ref
 from repro.kernels.indexing import StripeIndex
 from repro.kernels.ops import (
     anchor_attention,
+    anchor_attention_staged,
     anchor_phase,
     attention,
     chunk_anchor_attention,
     compact_stripe_tiles,
     flash_attention,
     flash_decode,
+    merge_anchor_slots,
     pack_stripe_indices,
     paged_flash_decode,
     sparse_attention,
@@ -28,6 +30,7 @@ from repro.kernels.ops import (
 __all__ = [
     "StripeIndex",
     "anchor_attention",
+    "anchor_attention_staged",
     "anchor_phase",
     "attention",
     "chunk_anchor_attention",
@@ -36,6 +39,7 @@ __all__ = [
     "flash_attention",
     "flash_decode",
     "indexing",
+    "merge_anchor_slots",
     "pack_stripe_indices",
     "paged_flash_decode",
     "ref",

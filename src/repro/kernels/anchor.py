@@ -1,10 +1,15 @@
-"""Pattern-based Anchor Computation — Pallas TPU kernel (paper Alg. 1).
+"""Pattern-based Anchor Computation — Pallas TPU kernel (paper Alg. 1),
+scores-only.
 
-For every query block the kernel runs an online softmax over the *anchor
-region only*: KV block 0 (attention sink) plus the local diagonal window of
-its superblock.  It emits the running statistics ``(M, L, Acc)`` which the
-sparse kernel (Alg. 3) resumes — the paper's "temporarily cache the
-intermediate results … and reuse them" (§3.4).
+For every query block the kernel runs an online MAX (no softmax state)
+over the *anchor region only*: KV block 0 (attention sink) plus the local
+diagonal window of its superblock.  Since the fused-identification
+rewrite (DESIGN.md §9) the softmax statistics ``(l, acc)`` are gone —
+the fused sparse sweep recomputes the anchor region from zero state —
+so this kernel loads NO value tiles and writes NO per-row f32 arrays to
+HBM.  It emits exactly what Alg. 2 consumes: the block-pooled anchor
+``m_bar`` and the block-pooled queries ``q_mean`` (the q tile is already
+in VMEM for the scores, so the pooling is free), both ``T_m``-sized.
 
 Grid: ``(batch*heads, T_m, 1 + step*r + r)``.  Window slot ``w=0`` is the
 init block; slots ``w>=1`` map to KV block ``w_start(k) + w - 1`` via the
@@ -24,7 +29,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.compat import tpu_compiler_params
 from repro.core.config import AnchorConfig
 from repro.kernels import dispatch
-from repro.kernels.indexing import kv_head_index
+from repro.kernels.indexing import kv_head_index, length_grid_operand
 
 _NEG_INF = -1e30
 
@@ -37,8 +42,8 @@ def _candidate_block(i, w, cfg: AnchorConfig):
 
 
 def _anchor_kernel(
-    q_ref, k_ref, v_ref, len_ref, m_ref, l_ref, acc_ref, ms_ref, ls_ref,
-    accs_ref, *, cfg: AnchorConfig, scale: float, t_n: int
+    q_ref, k_ref, len_ref, qm_ref, mb_ref, ms_ref,
+    *, cfg: AnchorConfig, scale: float, t_n: int
 ):
     i = pl.program_id(1)
     w = pl.program_id(2)
@@ -46,8 +51,6 @@ def _anchor_kernel(
     @pl.when(w == 0)
     def _init():
         ms_ref[...] = jnp.full_like(ms_ref, _NEG_INF)
-        ls_ref[...] = jnp.zeros_like(ls_ref)
-        accs_ref[...] = jnp.zeros_like(accs_ref)
 
     blk = _candidate_block(i, w, cfg)
     last_blk = i * cfg.r + cfg.r - 1
@@ -65,40 +68,45 @@ def _anchor_kernel(
         length = len_ref[0, 0]
         s = jnp.where((col <= row) & (col < length) & (row < length),
                       s, _NEG_INF)
-        m_prev = ms_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        # Rows fully masked keep m == -inf; exp(-inf - -inf) guards below.
-        p = jnp.where(s <= _NEG_INF, 0.0, p)
-        alpha = jnp.exp(m_prev - m_new)
-        ls_ref[...] = ls_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
-        accs_ref[...] = accs_ref[...] * alpha + jax.lax.dot_general(
-            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        ms_ref[...] = m_new
+        ms_ref[...] = jnp.maximum(
+            ms_ref[...], jnp.max(s, axis=-1, keepdims=True))
 
     @pl.when(w == pl.num_programs(2) - 1)
     def _finish():
-        m_ref[0] = ms_ref[...][:, 0]
-        l_ref[0] = ls_ref[...][:, 0]
-        acc_ref[0] = accs_ref[...]
+        # Fused pooling: q is already resident for the scores, so the
+        # block means cost nothing extra and nothing row-resolution ever
+        # leaves the kernel.  Padded rows (varlen) are excluded; an
+        # all-padding block pools to m_bar = +inf (never selected) and
+        # q_mean = 0.
+        length = len_ref[0, 0]
+        rows = i * cfg.block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (cfg.block_q, 1), 0)
+        rv = rows < length  # (block_q, 1)
+        cnt = jnp.sum(rv.astype(jnp.float32))
+        denom = jnp.maximum(cnt, 1.0)
+        m_sum = jnp.sum(jnp.where(rv, ms_ref[...], 0.0))
+        mb_ref[0] = jnp.where(
+            cnt == 0.0, jnp.full((1,), jnp.inf, jnp.float32),
+            (m_sum / denom)[None])
+        q = q_ref[0].astype(jnp.float32)
+        qm_ref[0, 0] = jnp.sum(jnp.where(rv, q, 0.0), axis=0) / denom
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
 def anchor_phase_pallas(
     q: jnp.ndarray,
     k: jnp.ndarray,
-    v: jnp.ndarray,
     cfg: AnchorConfig,
     interpret: bool = True,
     lengths: jnp.ndarray | None = None,
-) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Alg. 1 for batched heads.  q: (B, Hq, N, D); k, v: (B, Hkv, N, D).
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Alg. 1 (scores-only) for batched heads.
 
-    Returns ``(m, l, acc)`` with shapes (B, Hq, N), (B, Hq, N), (B, Hq, N, D)
-    in f32 — the anchor statistics.  With ``lengths`` ((B,) int32), padding
-    keys are masked out and padded query rows emit ``(-1e30, 0, 0)``.
+    q: (B, Hq, N, D); k: (B, Hkv, N, D).  Returns the block-pooled
+    ``(q_mean, m_bar)`` with shapes (B, Hq, T_m, D) and (B, Hq, T_m) in
+    f32.  With ``lengths`` ((B,) int32), padding keys are masked out of
+    the anchor scores and padded rows are excluded from the pooling
+    (all-padding blocks emit ``m_bar = +inf``).
     """
     batch, hq, n, d = q.shape
     hkv = k.shape[1]
@@ -109,49 +117,39 @@ def anchor_phase_pallas(
 
     qf = q.reshape(batch * hq, n, d)
     kf = k.reshape(batch * hkv, n, d)
-    vf = v.reshape(batch * hkv, n, d)
-    if lengths is None:
-        lens = jnp.full((batch,), n, jnp.int32)
-    else:
-        lens = lengths.astype(jnp.int32)
-    lf = jnp.repeat(lens, hq)[:, None]  # (batch*hq, 1)
+    lf, len_spec = length_grid_operand(lengths, batch, hq, n)
 
     def kv_index(b, i, w):
         blk = jnp.clip(_candidate_block(i, w, cfg), 0, t_n - 1)
         return kv_head_index(b, hq, hkv), blk, 0
 
     kernel = functools.partial(_anchor_kernel, cfg=cfg, scale=scale, t_n=t_n)
-    m, l, acc = pl.pallas_call(
+    q_mean, m_bar = pl.pallas_call(
         kernel,
         grid=(batch * hq, t_m, n_slots),
         in_specs=[
             pl.BlockSpec((1, cfg.block_q, d), lambda b, i, w: (b, i, 0)),
             pl.BlockSpec((1, cfg.block_kv, d), kv_index),
-            pl.BlockSpec((1, cfg.block_kv, d), kv_index),
-            pl.BlockSpec((1, 1), lambda b, i, w: (b, 0)),
+            len_spec,
         ],
         out_specs=[
-            pl.BlockSpec((1, cfg.block_q), lambda b, i, w: (b, i)),
-            pl.BlockSpec((1, cfg.block_q), lambda b, i, w: (b, i)),
-            pl.BlockSpec((1, cfg.block_q, d), lambda b, i, w: (b, i, 0)),
+            pl.BlockSpec((1, 1, d), lambda b, i, w: (b, i, 0)),
+            pl.BlockSpec((1, 1), lambda b, i, w: (b, i)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((batch * hq, n), jnp.float32),
-            jax.ShapeDtypeStruct((batch * hq, n), jnp.float32),
-            jax.ShapeDtypeStruct((batch * hq, n, d), jnp.float32),
+            jax.ShapeDtypeStruct((batch * hq, t_m, d), jnp.float32),
+            jax.ShapeDtypeStruct((batch * hq, t_m), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((cfg.block_q, 1), jnp.float32),
-            pltpu.VMEM((cfg.block_q, 1), jnp.float32),
-            pltpu.VMEM((cfg.block_q, d), jnp.float32),
         ],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(qf, kf, vf, lf)
-    shape = (batch, hq, n)
-    return m.reshape(shape), l.reshape(shape), acc.reshape(batch, hq, n, d)
+    )(qf, kf, lf)
+    return (q_mean.reshape(batch, hq, t_m, d),
+            m_bar.reshape(batch, hq, t_m))
 
 
 dispatch.register("anchor_phase", "pallas_interpret")(

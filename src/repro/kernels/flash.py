@@ -25,7 +25,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
 from repro.kernels import dispatch
-from repro.kernels.indexing import kv_head_index
+from repro.kernels.indexing import kv_head_index, length_grid_operand
 
 _NEG_INF = -1e30
 
@@ -103,11 +103,7 @@ def flash_attention(
     qf = q.reshape(batch * hq, n, d)
     kf = k.reshape(batch * hkv, n, d)
     vf = v.reshape(batch * hkv, n, d)
-    if lengths is None:
-        lens = jnp.full((batch,), n, jnp.int32)
-    else:
-        lens = lengths.astype(jnp.int32)
-    lf = jnp.repeat(lens, hq)[:, None]  # (batch*hq, 1)
+    lf, len_spec = length_grid_operand(lengths, batch, hq, n)
 
     def kv_index(b, i, j):
         del i
@@ -123,7 +119,7 @@ def flash_attention(
             pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
             pl.BlockSpec((1, block_kv, d), kv_index),
             pl.BlockSpec((1, block_kv, d), kv_index),
-            pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
+            len_spec,
         ],
         out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((batch * hq, n, d), q.dtype),

@@ -33,6 +33,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
 
 
 class StripeIndex(NamedTuple):
@@ -82,6 +83,143 @@ def stripe_tile(n: int, block_c: int) -> int:
     keeps every tile in-bounds (no partial tail tiles to mask).
     """
     return math.gcd(n, max(1, block_c))
+
+
+def length_grid_operand(lengths, batch: int, heads: int, n: int):
+    """Per-sequence lengths → one ``(1, 1)`` SMEM-style row per grid row.
+
+    The one piece of varlen plumbing shared by every Pallas kernel in
+    this package (flash / anchor / stripe-select): flatten the optional
+    ``(B,)`` valid-token counts to a ``(batch*heads, 1)`` int32 operand
+    (``lengths=None`` ⇒ every row is fully valid) and pair it with the
+    ``(1, 1)`` BlockSpec whose index map picks grid row ``b``'s entry
+    regardless of the grid's remaining axes.
+
+    Returns ``(operand, block_spec)``.
+    """
+    if lengths is None:
+        lens = jnp.full((batch,), n, jnp.int32)
+    else:
+        lens = lengths.astype(jnp.int32)
+    operand = jnp.repeat(lens, heads)[:, None]  # (batch*heads, 1)
+    return operand, pl.BlockSpec((1, 1), lambda b, *_: (b, 0))
+
+
+def select_capacity(n_tiles: int, n: int, capacity: int | None,
+                    g: int, share: bool) -> int:
+    """Tile-slot budget of a compact stripe selection.
+
+    Each query head keeps at most ``min(capacity, n)`` stripes, which
+    touch at most that many tiles; a KV group's union table therefore
+    needs at most ``g``× that (1× under ``share``), clamped to the
+    number of tiles that exist.
+    """
+    cap_s = n if capacity is None else min(capacity, n)
+    return max(1, min(n_tiles, cap_s * (1 if share else g)))
+
+
+def window_start_tokens(gs, cfg):
+    """First local-window KV token of (global) superblock ``gs``.
+
+    The one region-defining formula shared by the production
+    identification/sweep stages (paper Alg. 1 line 8, 0-based:
+    ``max(1, gs·step·r)·block_kv``).  ``gs`` may be an int, a traced
+    scalar, or an array of superblock ids.  The reference oracles
+    (core/, kernels/ref.py) keep their own independent copies on
+    purpose — they must not share code with what they check.
+    """
+    return jnp.maximum(1, gs * cfg.step * cfg.r) * cfg.block_kv
+
+
+def num_anchor_slots(tile: int, cfg) -> int:
+    """Static tile-slot count of the guaranteed anchor region.
+
+    Init (sink) block: ``ceil(block_kv / tile)`` tiles.  Local window:
+    spans at most ``superblock_q`` tokens starting at an arbitrary
+    offset, so at most ``ceil(superblock_q / tile) + 1`` tiles.
+    """
+    return -(-cfg.block_kv // tile) + (-(-cfg.superblock_q() // tile) + 1)
+
+
+def anchor_tile_slots(nk: int, t_s: int, tile: int, cfg, sb0=0):
+    """Guaranteed anchor-region slots for ``t_s`` superblocks (DESIGN.md §9).
+
+    The fused sparse sweep computes the anchor region (KV block 0 + the
+    superblock's local diagonal window) inside the same online-softmax
+    pass as the selected stripes, so the anchor tiles are emitted as
+    *leading* table slots rather than as a separate ``(m, l, acc)``
+    resume state.  ``sb0`` (int or traced scalar) offsets the superblock
+    ids for chunked prefill, where superblock ``s`` of the chunk is
+    global superblock ``sb0 + s`` over the cache's ``nk`` keys.
+
+    Returns ``(tile_idx, tile_valid, valid)`` with shapes ``(T_s, A)``,
+    ``(T_s, A)``, ``(T_s, A * tile)`` (``A = num_anchor_slots``), int32,
+    shared by every batch element and head.  Valid bits mark membership
+    in the anchor region only; the causal (and varlen) trimming happens
+    per query row inside the sparse sweep.  A window tile that also
+    holds init-block or candidate positions carries disjoint valid bits,
+    so duplicated tile ids never double-count a position.
+    """
+    if nk % tile:
+        raise ValueError(f"tile ({tile}) must divide the KV length ({nk})")
+    n_tiles = nk // tile
+    a_init = min(-(-cfg.block_kv // tile), n_tiles)
+    a_win = num_anchor_slots(tile, cfg) - -(-cfg.block_kv // tile)
+    sb_q = cfg.superblock_q()
+    gs = jnp.asarray(sb0) + jnp.arange(t_s)  # global superblock ids
+    w_start = window_start_tokens(gs, cfg)  # (T_s,)
+    w_end = jnp.minimum((gs + 1) * sb_q, nk)
+    off = jnp.arange(tile)
+
+    # Init (sink) slots: tiles overlapping [0, block_kv).
+    init_idx = jnp.broadcast_to(
+        jnp.arange(a_init, dtype=jnp.int32), (t_s, a_init))
+    init_valid = (init_idx[..., None] * tile + off) < cfg.block_kv
+
+    # Window slots: tiles overlapping [w_start(s), w_end(s)).
+    win_idx = w_start[:, None] // tile + jnp.arange(a_win)  # (T_s, a_win)
+    win_ok = win_idx * tile < w_end[:, None]
+    win_idx = jnp.clip(win_idx, 0, n_tiles - 1).astype(jnp.int32)
+    cols = win_idx[..., None] * tile + off  # (T_s, a_win, tile)
+    win_valid = ((cols >= w_start[:, None, None])
+                 & (cols < w_end[:, None, None]) & win_ok[..., None])
+
+    tile_idx = jnp.concatenate([init_idx, win_idx], axis=1)
+    tile_valid = jnp.concatenate(
+        [jnp.ones_like(init_idx), win_ok.astype(jnp.int32)], axis=1)
+    valid = jnp.concatenate([init_valid, win_valid], axis=1)
+    return (tile_idx, tile_valid,
+            valid.reshape(t_s, -1).astype(jnp.int32))
+
+
+def merge_anchor_slots(
+    sel: StripeIndex, nk: int, cfg, sb0=0
+) -> StripeIndex:
+    """Prepend the guaranteed anchor slots to a compact stripe selection.
+
+    ``sel`` holds ONLY the difference-aware selected tiles (the
+    ``stripe_select`` op output); the result is the full table the fused
+    sparse sweep consumes: ``A`` anchor slots (identical across batch,
+    heads, and query-group members) followed by the selected slots.
+    """
+    b, hkv, t_s, _ = sel.tile_idx.shape
+    g = sel.valid.shape[2]
+    tile = sel.tile
+    a_idx, a_tv, a_valid = anchor_tile_slots(nk, t_s, tile, cfg, sb0=sb0)
+    a = a_idx.shape[1]
+    bcast = lambda x, shape: jnp.broadcast_to(x, shape)  # noqa: E731
+    return StripeIndex(
+        jnp.concatenate(
+            [bcast(a_idx[None, None], (b, hkv, t_s, a)), sel.tile_idx],
+            axis=-1),
+        jnp.concatenate(
+            [bcast(a_tv[None, None], (b, hkv, t_s, a)), sel.tile_valid],
+            axis=-1),
+        jnp.concatenate(
+            [bcast(a_valid[None, None, None], (b, hkv, g, t_s, a * tile)),
+             sel.valid],
+            axis=-1),
+    )
 
 
 def pack_stripe_indices(

@@ -11,21 +11,34 @@ masking) plus an optional per-sequence ``lengths`` array for right-padded
 variable-length batches, and dispatches to the dense flash path or the
 AnchorAttention pipeline accordingly.
 
-``anchor_attention`` chains Alg. 1 → Alg. 2 → (index-table compaction)
-→ Alg. 3 on every backend.  The compaction step
-(:func:`repro.kernels.indexing.compact_stripe_tiles`) converts the
-stripe hit-mask into GQA-native :class:`~repro.kernels.indexing.
-StripeIndex` tables — discrete KV *tile ids* per KV head plus
-per-query-head row validity — and the sparse stage loads those tiles
-straight from the original ``(B, Hkv, N, D)`` arrays (scalar-prefetch
-BlockSpec indirection on the Pallas backends, a per-slot gather scan on
-XLA).  Nothing Hq-wide is ever materialized; selection itself stays
-stripe-granular (DESIGN.md §3).
+``anchor_attention`` is the FUSED identification pipeline (DESIGN.md §9):
 
-:func:`chunk_anchor_attention` applies the same index-driven machinery
-to one superblock-aligned chunk of a chunked prefill attending into a
-KV-cache view — the serving path that keeps long-prompt chunks sparse
-instead of falling back to dense history attention.
+* ``anchor_phase`` is scores-only — it emits the block-pooled
+  ``(q_mean, m_bar)`` identification inputs directly and never writes
+  per-row ``(m, l, acc)`` statistics to HBM;
+* ``stripe_select`` emits compact per-(KV-head, superblock) tile ids,
+  per-query-head row validity, and kept counts straight from the kernel
+  — the dense ``(B, Hq, T_s, N)`` hit mask of the staged pipeline is
+  never materialized;
+* :func:`repro.kernels.indexing.merge_anchor_slots` prepends the
+  guaranteed anchor slots (KV block 0 + each superblock's local
+  diagonal window) to the selected tiles;
+* ``sparse_attention`` computes anchor + selected tiles in ONE
+  online-softmax sweep from zero state, loading discrete KV tiles
+  straight from the original ``(B, Hkv, N, D)`` arrays (scalar-prefetch
+  BlockSpec indirection on the Pallas backends, a per-slot gather scan
+  on XLA).  Nothing Hq-wide is ever materialized; selection itself
+  stays stripe-granular (DESIGN.md §3).
+
+Identification memory is ``O(B·Hkv·T_s·capacity)`` end-to-end.  The
+pre-fusion staged pipeline survives as :func:`anchor_attention_staged`
+(XLA-only, unregistered) — the tolerance oracle for fused-vs-staged
+parity tests and the baseline of ``benchmarks/prefill_index.py``.
+
+:func:`chunk_anchor_attention` applies the same fused machinery to one
+superblock-aligned chunk of a chunked prefill attending into a KV-cache
+view — the serving path that keeps long-prompt chunks sparse instead of
+falling back to dense history attention.
 """
 
 from __future__ import annotations
@@ -41,6 +54,7 @@ from repro.kernels import dispatch, indexing
 from repro.kernels.indexing import (
     StripeIndex,
     compact_stripe_tiles,
+    merge_anchor_slots,
     pack_stripe_indices,
 )
 
@@ -65,9 +79,11 @@ __all__ = [
     "sparse_attention",
     "ssd_chunked",
     "anchor_attention",
+    "anchor_attention_staged",
     "chunk_anchor_attention",
     "pack_stripe_indices",
     "compact_stripe_tiles",
+    "merge_anchor_slots",
     "StripeIndex",
 ]
 
@@ -183,19 +199,21 @@ def paged_flash_decode(
 def anchor_phase(
     q: jnp.ndarray,
     k: jnp.ndarray,
-    v: jnp.ndarray,
     cfg: AnchorConfig,
     lengths: jnp.ndarray | None = None,
     backend: str | None = None,
-) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Alg. 1 anchor statistics ``(m, l, acc)`` for batched heads.
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Alg. 1, scores-only: block-pooled ``(q_mean, m_bar)``.
 
-    With ``lengths``, padding keys are masked out of the statistics and
-    padded rows emit ``(-1e30, 0, 0)``.
+    Loads no V and emits no per-row statistics — the pooled pair is all
+    Alg. 2 consumes, and the fused sparse sweep recomputes the anchor
+    region from zero state (DESIGN.md §9).  With ``lengths``, padded
+    rows are excluded from the pooling (all-padding blocks emit
+    ``m_bar = +inf``).
     """
     fn, _ = dispatch.lookup("anchor_phase", backend)
     kw = {} if lengths is None else {"lengths": lengths}
-    return fn(q, k, v, cfg, **kw)
+    return fn(q, k, cfg, **kw)
 
 
 def stripe_select(
@@ -203,16 +221,20 @@ def stripe_select(
     m_bar: jnp.ndarray,
     k: jnp.ndarray,
     cfg: AnchorConfig,
+    tile: int,
     lengths: jnp.ndarray | None = None,
     backend: str | None = None,
-) -> jnp.ndarray:
-    """Alg. 2 stripe hit-mask (B, Hq, T_s, N) int32 from pooled inputs.
+) -> tuple[StripeIndex, jnp.ndarray]:
+    """Alg. 2, compact: ``(selected-tile tables, kept counts)``.
 
-    With ``lengths``, keys at positions >= length are never selected.
+    Emits per-(KV-head, superblock) tile ids with per-query-head row
+    validity straight from the kernel — no dense ``(B, Hq, T_s, N)``
+    hit mask exists on any backend.  With ``lengths``, keys at
+    positions >= length are never selected.
     """
     fn, _ = dispatch.lookup("stripe_select", backend)
     kw = {} if lengths is None else {"lengths": lengths}
-    return fn(q_mean, m_bar, k, cfg, **kw)
+    return fn(q_mean, m_bar, k, cfg, tile, **kw)
 
 
 def sparse_attention(
@@ -220,23 +242,28 @@ def sparse_attention(
     k: jnp.ndarray,
     v: jnp.ndarray,
     tables: StripeIndex,
-    m0: jnp.ndarray,
-    l0: jnp.ndarray,
-    acc0: jnp.ndarray,
     cfg: AnchorConfig,
+    lengths: jnp.ndarray | None = None,
+    q_offset: jnp.ndarray | None = None,
     block_c: int | None = None,
     backend: str | None = None,
 ) -> jnp.ndarray:
-    """Alg. 3 — index-driven resume of the online softmax.
+    """Alg. 3, fused: one online-softmax sweep from zero state.
 
     ``k``/``v`` are the ORIGINAL (B, Hkv, Nk, D) arrays; ``tables`` is a
-    :class:`repro.kernels.indexing.StripeIndex` naming the discrete KV
-    tiles to load per (KV head, superblock) with per-query-head row
-    validity.  No gathered K/V copies are taken (see module docstring).
+    :class:`repro.kernels.indexing.StripeIndex` whose LEADING slots are
+    the guaranteed anchor tiles (see ``merge_anchor_slots``) followed by
+    the selected stripes.  The sweep applies the causal (and varlen)
+    mask in-place from global positions (``q_offset`` offsets chunked
+    prefill rows), so no ``(m0, l0, acc0)`` resume state exists.
     """
     fn, _ = dispatch.lookup("sparse_attention", backend)
     kw = {} if block_c is None else {"block_c": block_c}
-    return fn(q, k, v, tables, m0, l0, acc0, cfg, **kw)
+    if lengths is not None:
+        kw["lengths"] = lengths
+    if q_offset is not None:
+        kw["q_offset"] = q_offset
+    return fn(q, k, v, tables, cfg, **kw)
 
 
 def ssd_chunked(
@@ -291,35 +318,93 @@ def _anchor_attention_pipeline(
     *,
     backend: str,
 ):
-    """AnchorAttention: Alg. 1 → pooling → Alg. 2 → index tables → Alg. 3.
+    """Fused AnchorAttention: scores → compact select → one sparse sweep.
 
-    All kernel stages run on ``backend``; the pooling and table
-    compaction are cheap XLA glue on every backend.  The sparse stage is
-    index-driven and GQA-group-native — with ``cfg.share_kv_groups`` the
-    per-head validity collapses to the group union (§Perf iteration C4);
+    All kernel stages run on ``backend``; the only XLA glue left is the
+    ``O(T_m)`` ``use_anchor`` ablation rewrite and the ``O(capacity)``
+    anchor-slot merge.  Identification materializes nothing dense: no
+    per-row ``(m, l, acc)`` statistics, no ``(B, Hq, T_s, N)`` hit mask
+    (DESIGN.md §9).  The sparse stage is index-driven and
+    GQA-group-native — with ``cfg.share_kv_groups`` the per-head
+    validity collapses to the group union (§Perf iteration C4);
     otherwise per-head selection semantics are preserved exactly on the
     shared Hkv-wide tables.
     """
     batch, hq, n, d = q.shape
-    hkv = k.shape[1]
-    t_m = cfg.num_q_blocks(n)
     tile = indexing.stripe_tile(n, min(block_c, n))
 
     phase_fn, _ = dispatch.lookup("anchor_phase", backend)
     select_fn, _ = dispatch.lookup("stripe_select", backend)
     sparse_fn, _ = dispatch.lookup("sparse_attention", backend)
+    kw = {} if lengths is None else {"lengths": lengths}
 
-    # Alg. 1 — anchor statistics.
-    if lengths is None:
-        m, l, acc = phase_fn(q, k, v, cfg)
-    else:
-        m, l, acc = phase_fn(q, k, v, cfg, lengths=lengths)
+    # Alg. 1 — scores-only, pooled in-kernel.
+    q_mean, m_bar = phase_fn(q, k, cfg, **kw)
+    if not cfg.use_anchor:
+        # Table 4 "Without Anchor" ablation: zero the anchor but keep the
+        # +inf sentinel of all-padding pooled blocks.
+        m_bar = jnp.where(jnp.isinf(m_bar), m_bar, jnp.zeros_like(m_bar))
 
-    # Pooling (cheap XLA reductions feeding Alg. 2).  Shares the core
-    # masked-pooling contract: padded rows are excluded; blocks of pure
-    # padding pool to +inf, which can never pass the threshold.
+    # Alg. 2 — compact tile selection (no dense hit mask).
+    sel, counts = select_fn(q_mean, m_bar, k, cfg, tile, **kw)
+
+    # Guaranteed anchor slots lead the tables (DESIGN.md §9).
+    tables = merge_anchor_slots(sel, n, cfg)
+
+    # Alg. 3 — one fused online-softmax sweep from zero state.
+    out = sparse_fn(q, k, v, tables, cfg, **kw)
+    if lengths is not None:
+        # Padded query rows produce exact zeros.
+        rows = jnp.arange(n)[None, None, :, None] < lengths[:, None, None, None]
+        out = jnp.where(rows, out, jnp.zeros((), out.dtype))
+    if return_stats:
+        return out, counts
+    return out
+
+
+for _backend in dispatch.BACKENDS:
+    dispatch.register("anchor_attention", _backend)(
+        functools.partial(_anchor_attention_pipeline, backend=_backend))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "block_c", "return_stats"))
+def anchor_attention_staged(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: AnchorConfig,
+    block_c: int = 128,
+    return_stats: bool = False,
+    lengths: jnp.ndarray | None = None,
+):
+    """The pre-fusion staged pipeline (XLA-only) — the parity oracle.
+
+    Alg. 1 full ``(m, l, acc)`` statistics → XLA pooling glue → dense
+    Alg. 2 hit mask → ``compact_stripe_tiles`` → Alg. 3 resume.  Kept
+    unregistered for fused-vs-staged parity tests (the fused sweep
+    changes the summation order, so the comparison is at tolerance) and
+    as the baseline of ``benchmarks/prefill_index.py``; it is also the
+    positive control of the jaxpr footprint tests — it DOES materialize
+    the ``(B, Hq, N[, Dv])`` f32 statistics and the ``(B, Hq, T_s, N)``
+    mask the fused path must not.
+    """
     from repro.core.anchor_attention import masked_block_mean
+    from repro.kernels.xla import (
+        staged_anchor_stats,
+        staged_sparse_attention,
+        staged_stripe_mask,
+    )
 
+    batch, hq, n, d = q.shape
+    hkv = k.shape[1]
+    t_m = cfg.num_q_blocks(n)
+    tile = indexing.stripe_tile(n, min(block_c, n))
+
+    # Alg. 1 — full anchor statistics.
+    m, l, acc = staged_anchor_stats(q, k, v, cfg, lengths=lengths)
+
+    # Pooling (XLA glue re-reading q and m).
     if lengths is None:
         q_mean = jnp.mean(
             q.reshape(batch, hq, t_m, cfg.block_q, d).astype(jnp.float32),
@@ -335,36 +420,21 @@ def _anchor_attention_pipeline(
         q_mean = pool(q, lengths, 0.0)
         m_bar = pool(m, lengths, jnp.inf)
     if not cfg.use_anchor:
-        zero = jnp.zeros_like(m_bar)
-        m_bar = zero if lengths is None else jnp.where(
-            jnp.isinf(m_bar), m_bar, zero)
+        m_bar = jnp.where(jnp.isinf(m_bar), m_bar, jnp.zeros_like(m_bar))
 
-    # Alg. 2 — stripe hit mask.
-    if lengths is None:
-        hit = select_fn(q_mean, m_bar, k, cfg)  # (B, Hq, T_s, N)
-    else:
-        hit = select_fn(q_mean, m_bar, k, cfg, lengths=lengths)
-
-    # Index-table compaction (TPU adaptation of discrete loading,
-    # DESIGN.md §3): discrete KV tile ids at Hkv width + per-query-head
-    # row validity — no gathered K/V copies, no KV replication.
+    # Alg. 2 — dense stripe hit mask + tile compaction.
+    hit = staged_stripe_mask(q_mean, m_bar, k, cfg, lengths=lengths)
     tables, counts = compact_stripe_tiles(
         hit, hkv, tile, cfg.capacity, share=cfg.share_kv_groups)
 
-    # Alg. 3 — resume the online softmax over the indexed tiles.
-    out = sparse_fn(q, k, v, tables, m, l, acc, cfg, block_c)
+    # Alg. 3 — resume the online softmax from the statistics.
+    out = staged_sparse_attention(q, k, v, tables, m, l, acc, cfg, block_c)
     if lengths is not None:
-        # Padded query rows produce exact zeros.
         rows = jnp.arange(n)[None, None, :, None] < lengths[:, None, None, None]
         out = jnp.where(rows, out, jnp.zeros((), out.dtype))
     if return_stats:
         return out, counts
     return out
-
-
-for _backend in dispatch.BACKENDS:
-    dispatch.register("anchor_attention", _backend)(
-        functools.partial(_anchor_attention_pipeline, backend=_backend))
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "block_c", "backend"))
@@ -379,7 +449,8 @@ def _chunk_anchor_impl(
     *,
     backend: str,
 ):
-    """AnchorAttention for one superblock-aligned chunk over a KV cache.
+    """Fused AnchorAttention for one superblock-aligned chunk over a KV
+    cache.
 
     The chunk's query rows sit at global positions ``[pos, pos + C)``;
     the cache views hold the real history at ``[0, pos)`` and the
@@ -391,14 +462,18 @@ def _chunk_anchor_impl(
     * local window — entirely inside the chunk (a superblock's window
       starts at its own first block);
     * stripe candidates — ``[block_kv, superblock_start)``: pure
-      history, selected by the usual difference-aware threshold and
-      resumed through the SAME index-driven ``sparse_attention`` op the
-      full prefill uses.
+      history, selected by the usual difference-aware threshold.
 
-    For a full prompt processed chunk by chunk this computes exactly the
-    same attention as one-shot anchor prefill (same regions, same
-    selection rule) — which is what lets the serving engine keep long
-    chunked prompts sparse instead of falling back to dense history
+    All three regions feed ONE fused sparse sweep (DESIGN.md §9): the
+    identification glue here is scores-only (no V loads, no per-row
+    ``(m, l, acc)``), the selection is the compact chunked scan of
+    :func:`repro.kernels.xla.stripe_select_xla` with the chunk's global
+    superblock offset, and the anchor region rides in the tables'
+    guaranteed leading slots with ``q_offset = pos`` aligning the causal
+    mask.  For a full prompt processed chunk by chunk this computes
+    exactly the same attention as one-shot anchor prefill (same regions,
+    same selection rule) — which is what lets the serving engine keep
+    long chunked prompts sparse instead of falling back to dense history
     attention.
 
     ``live`` (() int32, optional) is the number of REAL rows of a
@@ -410,46 +485,40 @@ def _chunk_anchor_impl(
     rows must match the one-shot varlen prefill, so pooling excludes
     rows >= live (all-pad blocks pool to +inf, which never selects).
     """
+    from repro.kernels.xla import stripe_select_xla
+
     b, hq, c, d = q.shape
     hkv, s_len = k_cache.shape[1], k_cache.shape[2]
     g = hq // hkv
-    dv = v_cache.shape[-1]
     sb = cfg.superblock_q()
     if c % sb:
         raise ValueError(
             f"chunk length {c} must be a multiple of the identification "
             f"superblock ({sb})")
     t_mc = c // cfg.block_q
-    t_sc = c // sb
     scale = 1.0 / (d ** 0.5)
     f32 = jnp.float32
 
     qg = q.reshape(b, hkv, g, c, d).astype(f32)
     row = pos + jnp.arange(c)  # global query positions
 
-    # --- Alg. 1 over (init block ∪ in-chunk window).
+    # --- Scores-only Alg. 1 over (init block ∪ in-chunk window): the
+    # per-row anchor m, never the (l, acc) softmax state — the fused
+    # sweep recomputes the region with V.
     k0 = k_cache[:, :, : cfg.block_kv].astype(f32)
     s0 = jnp.einsum("bkgqd,bknd->bkgqn", qg, k0) * scale
     ok0 = jnp.arange(cfg.block_kv)[None, :] <= row[:, None]  # (C, b_kv)
     s0 = jnp.where(ok0[None, None, None], s0, _NEG_INF)
     kc = jax.lax.dynamic_slice_in_dim(k_cache, pos, c, axis=2).astype(f32)
-    vc = jax.lax.dynamic_slice_in_dim(v_cache, pos, c, axis=2).astype(f32)
     sw = jnp.einsum("bkgqd,bknd->bkgqn", qg, kc) * scale
     # Window of row r: [w_start_tok(superblock(r)), r] — in-chunk because
     # chunks are superblock-aligned.
     w_start = jnp.maximum(cfg.block_kv, (row // sb) * sb)  # (C,)
     okw = (row[None, :] >= w_start[:, None]) & (row[None, :] <= row[:, None])
     sw = jnp.where(okw[None, None, None], sw, _NEG_INF)
-    s = jnp.concatenate([s0, sw], axis=-1)  # (B, Hkv, G, C, b_kv + C)
-    m = jnp.max(s, axis=-1)
-    p = jnp.exp(s - m[..., None])
-    p = jnp.where(s <= _NEG_INF, 0.0, p)
-    length = jnp.sum(p, axis=-1)
-    vcat = jnp.concatenate(
-        [v_cache[:, :, : cfg.block_kv].astype(f32), vc], axis=2)
-    acc = jnp.einsum("bkgqn,bknd->bkgqd", p, vcat)
+    m = jnp.maximum(jnp.max(s0, axis=-1), jnp.max(sw, axis=-1))
 
-    # --- Alg. 2 over the history candidates.
+    # --- Pooled identification inputs (live-masked for padded chunks).
     qb5 = qg.reshape(b, hkv, g, t_mc, cfg.block_q, d)
     mb5 = m.reshape(b, hkv, g, t_mc, cfg.block_q)
     if live is None:
@@ -468,26 +537,16 @@ def _chunk_anchor_impl(
         m_bar = jnp.where(cnt[None, None, None] == 0, jnp.inf, m_bar)
     if not cfg.use_anchor:
         m_bar = jnp.where(jnp.isinf(m_bar), m_bar, jnp.zeros_like(m_bar))
-    s_id = jnp.einsum(
-        "bkgmd,bknd->bkgmn", q_mean, k_cache.astype(f32)) * scale
-    hit = (m_bar[..., None] - s_id) <= cfg.theta
-    hit = hit.reshape(b, hkv, g, t_sc, cfg.step, s_len).any(axis=4)
-    kidx = jnp.arange(s_len)[None, :]
-    sb0 = pos // sb
-    w_start_s = jnp.maximum(cfg.block_kv, (sb0 + jnp.arange(t_sc)) * sb)
-    cand = (kidx >= cfg.block_kv) & (kidx < w_start_s[:, None])
-    hit = (hit & cand[None, None, None]).reshape(b, hq, t_sc, s_len)
 
-    # --- Alg. 3: index tables over the cache, same sparse op as prefill.
+    # --- Compact selection over the history + one fused sparse sweep.
     tile = indexing.stripe_tile(s_len, min(block_c, s_len))
-    tables, _ = compact_stripe_tiles(
-        hit.astype(jnp.int32), hkv, tile, cfg.capacity,
-        share=cfg.share_kv_groups)
+    sb0 = pos // sb
+    sel, _ = stripe_select_xla(
+        q_mean.reshape(b, hq, t_mc, d), m_bar.reshape(b, hq, t_mc),
+        k_cache, cfg, tile, sb0=sb0)
+    tables = merge_anchor_slots(sel, s_len, cfg, sb0=sb0)
     sparse_fn, _ = dispatch.lookup("sparse_attention", backend)
-    out = sparse_fn(
-        q, k_cache, v_cache, tables,
-        m.reshape(b, hq, c), length.reshape(b, hq, c),
-        acc.reshape(b, hq, c, dv), cfg, block_c)
+    out = sparse_fn(q, k_cache, v_cache, tables, cfg, q_offset=pos)
     return out.astype(q.dtype)
 
 
@@ -501,7 +560,7 @@ def chunk_anchor_attention(
     live: jnp.ndarray | None = None,
     backend: str | None = None,
 ) -> jnp.ndarray:
-    """Index-driven AnchorAttention for one chunk of a chunked prefill.
+    """Fused AnchorAttention for one chunk of a chunked prefill.
 
     q: (B, Hq, C, D) chunk queries (``C % cfg.superblock_q() == 0``);
     k_cache/v_cache: (B, Hkv, S, D) per-sequence cache views already

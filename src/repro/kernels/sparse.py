@@ -1,16 +1,25 @@
 """Fine-Grained Sparse Computation — Pallas kernel (paper Alg. 3),
-index-driven.
+index-driven and FUSED.
 
-Resumes the online softmax from the anchor statistics ``(M, L, Acc)``
-over the *discrete* KV tiles named by a :class:`repro.kernels.indexing.
-StripeIndex` table: the tile ids arrive via scalar prefetch
-(``PrefetchScalarGridSpec``) and feed the K/V BlockSpec index maps, so
-each grid step DMAs one selected tile straight out of the original
-``(B, Hkv, N, D)`` arrays — no gathered ``k_sel``/``v_sel`` copies in
-HBM, no ``jnp.repeat`` of K/V for GQA (DESIGN.md §3).  The query-head
-group dimension is folded into the block shapes: one KV tile feeds all
-``G = Hq // Hkv`` query heads of its group, and selection stays
-stripe-granular via the per-query-head ``valid`` rows.
+ONE online-softmax sweep from zero state over the discrete KV tiles
+named by a :class:`repro.kernels.indexing.StripeIndex` table whose
+leading slots are the guaranteed anchor region (KV block 0 + each
+superblock's local diagonal window — ``merge_anchor_slots``) and whose
+remaining slots are the difference-aware selected stripes.  There is no
+``(m0, l0, acc0)`` resume state: the anchor statistics never round-trip
+through HBM (DESIGN.md §9).  The causal (and varlen) mask is applied
+in-kernel from global positions — a no-op for stripe slots (strictly
+below each superblock's window) and exactly the diagonal trim for the
+anchor slots.
+
+The tile ids arrive via scalar prefetch (``PrefetchScalarGridSpec``) and
+feed the K/V BlockSpec index maps, so each grid step DMAs one selected
+tile straight out of the original ``(B, Hkv, N, D)`` arrays — no
+gathered ``k_sel``/``v_sel`` copies in HBM, no ``jnp.repeat`` of K/V for
+GQA (DESIGN.md §3).  The query-head group dimension is folded into the
+block shapes: one KV tile feeds all ``G = Hq // Hkv`` query heads of its
+group, and selection stays stripe-granular via the per-query-head
+``valid`` rows.
 
 Grid: ``(batch * Hkv, T_m, C_t)`` with the tile-slot axis sequential.
 """
@@ -33,18 +42,20 @@ _NEG_INF = -1e30
 
 
 def _sparse_kernel(
-    idx_ref, q_ref, k_ref, v_ref, valid_ref, m0_ref, l0_ref, acc0_ref,
-    o_ref, ms_ref, ls_ref, accs_ref, *, scale, g, block_q
+    idx_ref, len_ref, off_ref, q_ref, k_ref, v_ref, valid_ref,
+    o_ref, ms_ref, ls_ref, accs_ref, *, cfg: AnchorConfig, scale, g, tile
 ):
-    del idx_ref  # consumed by the BlockSpec index maps
+    bh = pl.program_id(0)
+    i = pl.program_id(1)
     c = pl.program_id(2)
+    block_q = cfg.block_q
     rows = g * block_q
 
     @pl.when(c == 0)
     def _init():
-        ms_ref[...] = m0_ref[0].reshape(rows)[:, None]
-        ls_ref[...] = l0_ref[0].reshape(rows)[:, None]
-        accs_ref[...] = acc0_ref[0].reshape(rows, acc0_ref.shape[-1])
+        ms_ref[...] = jnp.full_like(ms_ref, _NEG_INF)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+        accs_ref[...] = jnp.zeros_like(accs_ref)
 
     q = q_ref[0].astype(jnp.float32).reshape(rows, q_ref.shape[-1])
     k = k_ref[0].astype(jnp.float32)  # (tile, D)
@@ -55,13 +66,21 @@ def _sparse_kernel(
     vld = valid_ref[0, :, 0] != 0
     ok = jnp.broadcast_to(vld[:, None, :], (g, block_q, vld.shape[-1]))
     ok = ok.reshape(rows, vld.shape[-1])
+    # Causal + varlen trim from global positions: the row offset comes in
+    # via scalar prefetch (chunked prefill sets it to the chunk start).
+    tile_id = idx_ref[bh, i // cfg.step, c]
+    col = tile_id * tile + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    row = (off_ref[0] + i * block_q
+           + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % block_q)
+    length = len_ref[bh]
+    ok &= (col <= row) & (col < length) & (row < length)
     s = jnp.where(ok, s, _NEG_INF)
     m_prev = ms_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
     p = jnp.exp(s - m_new)
     p = jnp.where(ok, p, 0.0)
-    # Varlen padding rows resume from m0 == -1e30 with all-invalid slots;
-    # without this guard exp(s - m_new) above is exp(0) = 1 there.
+    # Varlen padding rows keep m == -1e30 with everything masked; without
+    # this guard exp(s - m_new) above is exp(0) = 1 there.
     p = jnp.where(s <= _NEG_INF, 0.0, p)
     alpha = jnp.exp(m_prev - m_new)
     ls_ref[...] = ls_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
@@ -73,40 +92,42 @@ def _sparse_kernel(
 
     @pl.when(c == pl.num_programs(2) - 1)
     def _finish():
-        # l >= 1 for causal rows (anchor stats include the diagonal); the
-        # guard only protects varlen padding rows with empty statistics.
+        # l >= 1 for causal rows (the anchor slots contain the diagonal);
+        # the guard only protects varlen padding rows (exact zeros).
         out = accs_ref[...] / jnp.maximum(ls_ref[...], 1e-30)
         o_ref[0] = out.reshape(g, block_q, accs_ref.shape[-1]).astype(
             o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "block_c", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "block_c", "interpret"))
 def sparse_attention_pallas(
     q: jnp.ndarray,
     k: jnp.ndarray,
     v: jnp.ndarray,
     tables: StripeIndex,
-    m0: jnp.ndarray,
-    l0: jnp.ndarray,
-    acc0: jnp.ndarray,
     cfg: AnchorConfig,
+    lengths: jnp.ndarray | None = None,
+    q_offset: jnp.ndarray | None = None,
     block_c: int | None = None,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Alg. 3 for batched heads, index-driven.
+    """Alg. 3 (fused) for batched heads, index-driven.
 
     Args:
       q: (B, Hq, N, D) queries.
       k, v: (B, Hkv, Nk, D/Dv) — the ORIGINAL key/value arrays (``Nk``
         may exceed N, e.g. a cache view under chunked prefill).
-      tables: :class:`StripeIndex` over the ``Nk`` axis (tile must
-        divide Nk).
-      m0, l0: (B, Hq, N) anchor statistics;  acc0: (B, Hq, N, Dv).
+      tables: :class:`StripeIndex` over the ``Nk`` axis with the anchor
+        slots leading (tile must divide Nk).
+      lengths: optional (B,) int32 — varlen mask (padded rows emit
+        exact zeros, padding keys contribute nothing).
+      q_offset: optional () int32 global position of query row 0.
       block_c: accepted for signature parity; the DMA tile width is
         fixed by ``tables``.
 
     Returns:
-      (B, Hq, N, Dv) final attention output (``acc/l``) in q.dtype.
+      (B, Hq, N, Dv) final attention output in q.dtype.
     """
     del block_c
     batch, hq, n, d = q.shape
@@ -123,39 +144,37 @@ def sparse_attention_pallas(
     kf = k.reshape(batch * hkv, nk, d)
     vf = v.reshape(batch * hkv, nk, dv)
     validf = tables.valid.reshape(batch * hkv, g, t_s, c_t * tile)
-    m0f = m0.reshape(batch * hkv, g, n)
-    l0f = l0.reshape(batch * hkv, g, n)
-    acc0f = acc0.reshape(batch * hkv, g, n, dv)
     idxf = tables.tile_idx.reshape(batch * hkv, t_s, c_t).astype(jnp.int32)
+    if lengths is None:
+        lens = jnp.full((batch,), nk, jnp.int32)
+    else:
+        lens = lengths.astype(jnp.int32)
+    lensf = jnp.repeat(lens, hkv)  # one entry per batch*Hkv grid row
+    offf = (jnp.zeros((1,), jnp.int32) if q_offset is None
+            else jnp.asarray(q_offset, jnp.int32).reshape(1))
 
-    def q_index(bh, i, c, idx_ref):
-        del c, idx_ref
+    def q_index(bh, i, c, idx_ref, len_ref, off_ref):
+        del c, idx_ref, len_ref, off_ref
         return bh, 0, i, 0
 
-    def kv_index(bh, i, c, idx_ref):
+    def kv_index(bh, i, c, idx_ref, len_ref, off_ref):
+        del len_ref, off_ref
         return bh, idx_ref[bh, i // cfg.step, c], 0
 
-    def stat_index(bh, i, c, idx_ref):
-        del c, idx_ref
-        return bh, 0, i
-
-    def valid_index(bh, i, c, idx_ref):
-        del idx_ref
+    def valid_index(bh, i, c, idx_ref, len_ref, off_ref):
+        del idx_ref, len_ref, off_ref
         return bh, 0, i // cfg.step, c
 
     kernel = functools.partial(
-        _sparse_kernel, scale=scale, g=g, block_q=cfg.block_q)
+        _sparse_kernel, cfg=cfg, scale=scale, g=g, tile=tile)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=3,
         grid=(batch * hkv, t_m, c_t),
         in_specs=[
             pl.BlockSpec((1, g, cfg.block_q, d), q_index),
             pl.BlockSpec((1, tile, d), kv_index),
             pl.BlockSpec((1, tile, dv), kv_index),
             pl.BlockSpec((1, g, 1, tile), valid_index),
-            pl.BlockSpec((1, g, cfg.block_q), stat_index),
-            pl.BlockSpec((1, g, cfg.block_q), stat_index),
-            pl.BlockSpec((1, g, cfg.block_q, dv), q_index),
         ],
         out_specs=pl.BlockSpec((1, g, cfg.block_q, dv), q_index),
         scratch_shapes=[
@@ -172,7 +191,7 @@ def sparse_attention_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(idxf, qf, kf, vf, validf, m0f, l0f, acc0f)
+    )(idxf, lensf, offf, qf, kf, vf, validf)
     return out.reshape(batch, hq, n, dv)
 
 

@@ -1,14 +1,22 @@
-"""Difference-aware Stripe Sparsity Identification — Pallas kernel (Alg. 2).
+"""Difference-aware Stripe Sparsity Identification — Pallas kernel (Alg. 2),
+compact-emitting.
 
-Compare pooled-query × key scores against the pooled anchor; emit an int32
-stripe hit-mask per superblock.  Sort-free: a single VPU compare + OR-reduce
-over the ``step`` pooled rows (paper §3.2 — "avoiding costly sorting
-operations").
+Compare pooled-query × key scores against the pooled anchor and emit the
+surviving KV tiles DIRECTLY as compact per-(KV-head, superblock) tables:
+ascending tile ids, slot occupancy, per-QUERY-head row validity, and
+per-head kept counts.  The dense ``(B, Hq, T_s, N)`` hit mask of the
+staged pipeline — quadratic in context length — is never materialized
+(DESIGN.md §9); the kernel's working set is one ``(step, tile)`` score
+tile plus the ``O(capacity)`` output block it compacts into.
 
-Grid: ``(batch*heads, T_s, T_n)``; all axes parallel (no carry).  Output
-mask block is ``(1, 1, block_kv)`` int32 — the stripe coordinates stay in
-block-compressed form and are expanded to gather indices by the XLA packing
-step in :mod:`repro.kernels.ops` (TPU adaptation, DESIGN.md §3).
+Sort-free, like the paper's §3.2: the threshold is a VPU compare +
+OR-reduce over the ``step`` pooled rows, and the compaction is a running
+slot counter (position-ascending, per-query-head ``capacity`` budget —
+bit-identical to ``compact_stripe_tiles`` over the dense mask).
+
+Grid: ``(batch*Hkv, T_s, N // tile)`` with the tile axis sequential
+("arbitrary" — it carries the slot counters and the accumulated output
+block).
 """
 
 from __future__ import annotations
@@ -18,107 +26,177 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
 from repro.core.config import AnchorConfig
 from repro.kernels import dispatch
-from repro.kernels.indexing import kv_head_index
+from repro.kernels.indexing import (
+    StripeIndex,
+    length_grid_operand,
+    select_capacity,
+    window_start_tokens,
+)
 
 
-def _select_kernel(qm_ref, mb_ref, k_ref, len_ref, o_ref,
-                   *, cfg: AnchorConfig, scale, t_n):
+def _select_kernel(
+    qm_ref, mb_ref, k_ref, len_ref, tidx_ref, tvalid_ref, valid_ref,
+    counts_ref, hits_ref, kept_ref, slots_ref,
+    *, cfg: AnchorConfig, scale, tile, cap_s, c_sel, g
+):
     s_idx = pl.program_id(1)
     j = pl.program_id(2)
-    w_start = jnp.maximum(1, s_idx * cfg.step * cfg.r)
-    in_candidate = (j >= 1) & (j < w_start)
+
+    @pl.when(j == 0)
+    def _init():
+        tidx_ref[...] = jnp.zeros_like(tidx_ref)
+        tvalid_ref[...] = jnp.zeros_like(tvalid_ref)
+        valid_ref[...] = jnp.zeros_like(valid_ref)
+        hits_ref[...] = jnp.zeros_like(hits_ref)
+        kept_ref[...] = jnp.zeros_like(kept_ref)
+        slots_ref[...] = jnp.zeros_like(slots_ref)
+
+    w_start = window_start_tokens(s_idx, cfg)
+    in_candidate = ((j + 1) * tile > cfg.block_kv) & (j * tile < w_start)
 
     @pl.when(in_candidate)
     def _compute():
-        qm = qm_ref[0].astype(jnp.float32)  # (step, d)
-        k = k_ref[0].astype(jnp.float32)  # (block_kv, d)
+        qm = qm_ref[0].astype(jnp.float32).reshape(g * cfg.step, -1)
+        kt = k_ref[0].astype(jnp.float32)  # (tile, d)
         s = jax.lax.dot_general(
-            qm, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        ) * scale
-        diff = mb_ref[0][:, None] - s  # (step, block_kv)
-        hit = (diff <= cfg.theta).any(axis=0)
+            qm, kt, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        mb = mb_ref[0].reshape(g * cfg.step)[:, None]
+        hit = ((mb - s) <= cfg.theta).reshape(g, cfg.step, tile).any(axis=1)
+        col = j * tile + jax.lax.broadcasted_iota(jnp.int32, (g, tile), 1)
+        hit &= (col >= cfg.block_kv) & (col < w_start)
         # Padding keys of a right-padded batch are never stripe-selected.
-        col = j * cfg.block_kv + jax.lax.broadcasted_iota(
-            jnp.int32, hit.shape, 0)
         hit &= col < len_ref[0, 0]
-        o_ref[0, 0] = hit.astype(jnp.int32)
+        if cfg.share_kv_groups:
+            hit = jnp.broadcast_to(hit.any(axis=0, keepdims=True), hit.shape)
+        hit_i = hit.astype(jnp.int32)
+        # Position-ascending per-head budget: global rank = hits seen in
+        # earlier tiles + the exclusive in-tile prefix.
+        rank = hits_ref[...] + jnp.cumsum(hit_i, axis=1) - hit_i
+        kept = hit & (rank < cap_s)
+        kept_i = kept.astype(jnp.int32)
+        hits_ref[...] += jnp.sum(hit_i, axis=1, keepdims=True)
+        kept_ref[...] += jnp.sum(kept_i, axis=1, keepdims=True)
 
-    @pl.when(jnp.logical_not(in_candidate))
-    def _skip():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        # In-kernel compaction: scatter this tile into the next free slot.
+        slot = slots_ref[0, 0]
+        take = jnp.any(kept) & (slot < c_sel)
+        slot_eq = (jax.lax.broadcasted_iota(jnp.int32, (1, c_sel), 1)
+                   == slot) & take
+        tidx_ref[0] = jnp.where(slot_eq, j, tidx_ref[0])
+        tvalid_ref[0] = jnp.where(slot_eq, 1, tvalid_ref[0])
+        colslot = jax.lax.broadcasted_iota(
+            jnp.int32, (g, c_sel * tile), 1) // tile
+        kept_rep = jnp.broadcast_to(
+            kept_i[:, None, :], (g, c_sel, tile)).reshape(g, c_sel * tile)
+        valid_ref[0, :, 0] = jnp.where(
+            (colslot == slot) & take, kept_rep, valid_ref[0, :, 0])
+        slots_ref[0, 0] = slot + take.astype(jnp.int32)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finish():
+        counts_ref[0, :, 0] = kept_ref[...][:, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+@functools.partial(jax.jit, static_argnames=("cfg", "tile", "interpret"))
 def stripe_select_pallas(
     q_mean: jnp.ndarray,
     m_bar: jnp.ndarray,
     k: jnp.ndarray,
     cfg: AnchorConfig,
+    tile: int,
     interpret: bool = True,
     lengths: jnp.ndarray | None = None,
-) -> jnp.ndarray:
-    """Alg. 2 for batched heads.
+) -> tuple[StripeIndex, jnp.ndarray]:
+    """Alg. 2 (compact) for batched heads.
 
     Args:
       q_mean: (B, Hq, T_m, D) block-pooled queries.
       m_bar: (B, Hq, T_m) block-pooled anchors (zeros for the
         "Without Anchor" ablation; +inf rows are skipped — callers use
         that for all-padding pooled blocks of varlen batches).
-      k: (B, Hkv, N, D) keys.
+      k: (B, Hkv, N, D) keys (``N % tile == 0``).
+      tile: KV rows per compacted tile (the sparse stage's DMA width).
       lengths: optional (B,) int32 valid token counts — keys at positions
         >= length are never selected.
 
     Returns:
-      (B, Hq, T_s, N) int32 hit mask (1 = stripe selected).
+      (tables, counts): selected-stripe :class:`StripeIndex` tables (no
+      anchor slots) and per-head kept counts (B, Hq, T_s).
     """
     batch, hq, t_m, d = q_mean.shape
     hkv = k.shape[1]
     n = k.shape[2]
-    t_n = cfg.num_kv_blocks(n)
-    t_s = cfg.num_superblocks(n)
+    g = hq // hkv
+    if n % tile:
+        raise ValueError(f"tile ({tile}) must divide N ({n})")
+    n_tiles = n // tile
+    t_s = (t_m + cfg.step - 1) // cfg.step
+    cap_s = n if cfg.capacity is None else min(cfg.capacity, n)
+    c_sel = select_capacity(n_tiles, n, cfg.capacity, g, cfg.share_kv_groups)
     scale = 1.0 / (d ** 0.5)
 
     # Pad T_m up to T_s*step so the step-grouping is exact.
     pad = t_s * cfg.step - t_m
     if pad:
         q_mean = jnp.pad(q_mean, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        m_bar = jnp.pad(m_bar, ((0, 0), (0, 0), (0, pad)), constant_values=jnp.inf)
+        m_bar = jnp.pad(m_bar, ((0, 0), (0, 0), (0, pad)),
+                        constant_values=jnp.inf)
 
-    qf = q_mean.reshape(batch * hq, t_s * cfg.step, d)
-    mf = m_bar.reshape(batch * hq, t_s * cfg.step)
+    qf = q_mean.reshape(batch, hkv, g, t_s, cfg.step, d).reshape(
+        batch * hkv, g, t_s * cfg.step, d)
+    mf = m_bar.reshape(batch, hkv, g, t_s, cfg.step).reshape(
+        batch * hkv, g, t_s * cfg.step)
     kf = k.reshape(batch * hkv, n, d)
-    if lengths is None:
-        lens = jnp.full((batch,), n, jnp.int32)
-    else:
-        lens = lengths.astype(jnp.int32)
-    lf = jnp.repeat(lens, hq)[:, None]  # (batch*hq, 1)
+    lf, len_spec = length_grid_operand(lengths, batch, hkv, n)
 
-    def kv_index(b, s, j):
-        del s
-        return kv_head_index(b, hq, hkv), j, 0
-
-    kernel = functools.partial(_select_kernel, cfg=cfg, scale=scale, t_n=t_n)
-    out = pl.pallas_call(
+    kernel = functools.partial(
+        _select_kernel, cfg=cfg, scale=scale, tile=tile, cap_s=cap_s,
+        c_sel=c_sel, g=g)
+    tidx, tvalid, valid, counts = pl.pallas_call(
         kernel,
-        grid=(batch * hq, t_s, t_n),
+        grid=(batch * hkv, t_s, n_tiles),
         in_specs=[
-            pl.BlockSpec((1, cfg.step, d), lambda b, s, j: (b, s, 0)),
-            pl.BlockSpec((1, cfg.step), lambda b, s, j: (b, s)),
-            pl.BlockSpec((1, cfg.block_kv, d), kv_index),
-            pl.BlockSpec((1, 1), lambda b, s, j: (b, 0)),
+            pl.BlockSpec((1, g, cfg.step, d), lambda b, s, j: (b, 0, s, 0)),
+            pl.BlockSpec((1, g, cfg.step), lambda b, s, j: (b, 0, s)),
+            pl.BlockSpec((1, tile, d), lambda b, s, j: (b, j, 0)),
+            len_spec,
         ],
-        out_specs=pl.BlockSpec((1, 1, cfg.block_kv), lambda b, s, j: (b, s, j)),
-        out_shape=jax.ShapeDtypeStruct((batch * hq, t_s, n), jnp.int32),
+        out_specs=[
+            pl.BlockSpec((1, 1, c_sel), lambda b, s, j: (b, s, 0)),
+            pl.BlockSpec((1, 1, c_sel), lambda b, s, j: (b, s, 0)),
+            pl.BlockSpec((1, g, 1, c_sel * tile),
+                         lambda b, s, j: (b, 0, s, 0)),
+            pl.BlockSpec((1, g, 1), lambda b, s, j: (b, 0, s)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch * hkv, t_s, c_sel), jnp.int32),
+            jax.ShapeDtypeStruct((batch * hkv, t_s, c_sel), jnp.int32),
+            jax.ShapeDtypeStruct((batch * hkv, g, t_s, c_sel * tile),
+                                 jnp.int32),
+            jax.ShapeDtypeStruct((batch * hkv, g, t_s), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.int32),
+            pltpu.VMEM((g, 1), jnp.int32),
+            pltpu.VMEM((1, 1), jnp.int32),
+        ],
         compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "parallel")
+            dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
     )(qf, mf, kf, lf)
-    return out.reshape(batch, hq, t_s, n)
+    tables = StripeIndex(
+        tidx.reshape(batch, hkv, t_s, c_sel),
+        tvalid.reshape(batch, hkv, t_s, c_sel),
+        valid.reshape(batch, hkv, g, t_s, c_sel * tile),
+    )
+    return tables, counts.reshape(batch, hq, t_s)
 
 
 dispatch.register("stripe_select", "pallas_interpret")(

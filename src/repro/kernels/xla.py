@@ -15,6 +15,24 @@ gathers one discrete KV tile per scan step from the original arrays
 instead of materializing ``(B, Hq, T_s, capacity, D)`` copies
 (DESIGN.md §3).
 
+Since the fused-identification rewrite (DESIGN.md §9) the registered
+AnchorAttention stages materialize nothing dense and round-trip no
+full-resolution statistics:
+
+* ``anchor_phase`` is scores-only — it emits the block-pooled
+  ``(q_mean, m_bar)`` identification inputs directly, never a
+  ``(B, Hq, N)`` ``l`` or ``(B, Hq, N, Dv)`` f32 ``acc``;
+* ``stripe_select`` is a chunked scan that holds one score chunk plus
+  the ``O(capacity)`` compact tables — never a ``(B, Hq, T_s, N)`` hit
+  mask;
+* ``sparse_attention`` runs ONE fused online-softmax sweep from zero
+  state over the guaranteed anchor slots + the selected tiles.
+
+The pre-rewrite staged stages survive as the ``staged_*`` helpers below:
+they are the tolerance oracle for fused-vs-staged parity tests and the
+baseline of ``benchmarks/prefill_index.py`` (they are not registered in
+the dispatcher).
+
 Imports of :mod:`repro.models` / :mod:`repro.core.anchor_attention` are
 lazy (inside the functions) to keep the kernels package importable without
 dragging in the model zoo.
@@ -23,13 +41,19 @@ dragging in the model zoo.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.config import AnchorConfig
 from repro.kernels import dispatch
-from repro.kernels.indexing import StripeIndex
+from repro.kernels.indexing import (
+    StripeIndex,
+    num_anchor_slots,
+    select_capacity,
+    window_start_tokens,
+)
 
 _NEG_INF = -1e30
 
@@ -95,20 +119,451 @@ def paged_flash_decode_xla(
         gather_pages(v_pages, page_tables), cache_len)
 
 
+def _superblock_major(x, b, hkv, g, t_s, step_q, fill):
+    """(B, Hq, N, ...) -> (B, Hkv, G, T_s, step_q, ...), padding the
+    ragged last superblock's rows with ``fill`` (sliced off afterwards;
+    the pad rows' statistics start at (-1e30, 0, 0) so they stay NaN-free
+    through the scan)."""
+    n = x.shape[2]
+    pad = t_s * step_q - n
+    if pad:
+        widths = [(0, 0), (0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 3)
+        x = jnp.pad(x, widths, constant_values=fill)
+    return x.reshape(b, hkv, g, t_s, step_q, *x.shape[3:])
+
+
+# ------------------------------------------------ fused identification ----
+
+
+def _anchor_region_scores(qs, kf, cfg, t_s, off, nk, lengths):
+    """Masked init-block + local-window scores of the anchor region.
+
+    The ONE construction shared by the scores-only ``anchor_phase`` and
+    the fused sweep's inline anchor state: ``qs`` is (B, Hkv, T_s, G,
+    sb_q, D) superblock-major f32 queries with row 0 at global position
+    ``off``; ``kf`` the f32 (B, Hkv, Nk, D) keys.  Returns ``(s0, sw,
+    colsc)`` — the causally/varlen-masked init and window score blocks
+    plus the flattened window column ids (for the matching V gather).
+    """
+    b, hkv, _, g, sb_q, d = qs.shape
+    scale = 1.0 / (d ** 0.5)
+    row = off + (jnp.arange(t_s)[:, None] * sb_q
+                 + jnp.arange(sb_q)[None, :])  # (T_s, sb_q) global rows
+    row6 = row[None, None, :, None, :, None]
+
+    # Init (sink) block.
+    s0 = jnp.einsum("bksgqd,bknd->bksgqn", qs, kf[:, :, : cfg.block_kv]
+                    ) * scale
+    ok0 = jnp.arange(cfg.block_kv) <= row6
+    if lengths is not None:
+        len6 = lengths[:, None, None, None, None, None]
+        ok0 = ok0 & (jnp.arange(cfg.block_kv) < len6) & (row6 < len6)
+    s0 = jnp.where(ok0, s0, _NEG_INF)
+
+    # Local window: one contiguous sb_q-wide gather per superblock.
+    gs = off // sb_q + jnp.arange(t_s)  # global superblock ids
+    w_start = window_start_tokens(gs, cfg)
+    w_end = jnp.minimum((gs + 1) * sb_q, nk)
+    cols = w_start[:, None] + jnp.arange(sb_q)[None, :]  # (T_s, sb_q)
+    colsc = jnp.clip(cols, 0, nk - 1).reshape(-1)
+    kw = jnp.take(kf, colsc, axis=2).reshape(b, hkv, t_s, sb_q, d)
+    sw = jnp.einsum("bksgqd,bkscd->bksgqc", qs, kw) * scale
+    cols6 = cols[None, None, :, None, None, :]
+    okw = (cols6 <= row6) & (cols6 < w_end[None, None, :, None, None, None])
+    if lengths is not None:
+        okw = okw & (cols6 < len6) & (row6 < len6)
+    sw = jnp.where(okw, sw, _NEG_INF)
+    return s0, sw, colsc
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def anchor_phase_xla(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    cfg: AnchorConfig,
+    lengths: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Alg. 1, scores-only: block-pooled identification inputs.
+
+    Computes the per-row anchor (row-max logit over KV block 0 + the
+    superblock's local diagonal window) WITHOUT touching V and without
+    emitting per-row ``(m, l, acc)`` statistics — the fused sparse sweep
+    recomputes the anchor region from zero state (DESIGN.md §9), so all
+    Alg. 2 needs from this stage is the pooled pair.
+
+    Args:
+      q: (B, Hq, N, D); k: (B, Hkv, N, D).
+      lengths: optional (B,) int32 valid-token counts of a right-padded
+        batch — padding keys are masked out of the anchor scores and
+        padded rows are excluded from the pooling (all-padding pooled
+        blocks emit ``m_bar = +inf``, which never passes the threshold,
+        and ``q_mean = 0``).
+
+    Returns:
+      (q_mean, m_bar): (B, Hq, T_m, D) and (B, Hq, T_m), f32.
+    """
+    b, hq, n, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    t_m = cfg.num_q_blocks(n)
+    t_s = cfg.num_superblocks(n)
+    sb_q = cfg.superblock_q()
+    scale = 1.0 / (d ** 0.5)
+    f32 = jnp.float32
+    kf = k.astype(f32)
+
+    # Superblock-MAJOR (T_s before G): the window einsum's batch dims
+    # (b, k, s) stay layout-aligned — no transposes of the query block.
+    qs = _superblock_major(
+        q.astype(f32), b, hkv, g, t_s, sb_q, 0.0
+    ).transpose(0, 1, 3, 2, 4, 5)  # (B, Hkv, T_s, G, sb_q, D)
+    s0, sw, _ = _anchor_region_scores(qs, kf, cfg, t_s, 0, n, lengths)
+    row = (jnp.arange(t_s)[:, None] * sb_q
+           + jnp.arange(sb_q)[None, :])  # (T_s, sb_q) global query rows
+
+    # Row anchor + in-place pooling: never reshaped out to (B, Hq, N).
+    m6 = jnp.maximum(jnp.max(s0, axis=-1), jnp.max(sw, axis=-1))
+    m6 = m6.reshape(b, hkv, t_s, g, cfg.step, cfg.block_q)
+    row_b = row.reshape(t_s, cfg.step, cfg.block_q)
+    # q_mean never touches K, so pool it at (B, Hq, ...) width directly.
+    qp = q.reshape(b, hq, t_m, cfg.block_q, d).astype(f32)
+    if lengths is None:
+        m_bar = jnp.mean(m6, axis=-1)
+        q_mean = jnp.mean(qp, axis=-2)
+    else:
+        rv = (row_b[None, None, :, None]
+              < lengths[:, None, None, None, None, None])
+        cnt = rv.sum(axis=-1)
+        m_bar = jnp.sum(jnp.where(rv, m6, 0.0), axis=-1) / jnp.maximum(cnt, 1)
+        m_bar = jnp.where(cnt == 0, jnp.inf, m_bar)
+        row_q = jnp.arange(t_m * cfg.block_q).reshape(t_m, cfg.block_q)
+        rvq = row_q[None, None] < lengths[:, None, None, None]
+        cntq = rvq.sum(axis=-1)
+        q_mean = (jnp.sum(jnp.where(rvq[..., None], qp, 0.0), axis=-2)
+                  / jnp.maximum(cntq, 1)[..., None])
+    m_bar = m_bar.transpose(0, 1, 3, 2, 4).reshape(
+        b, hq, t_s * cfg.step)[:, :, :t_m]
+    return q_mean, m_bar
+
+
+dispatch.register("anchor_phase", "xla")(anchor_phase_xla)
+
+
+def _select_chunk(n_tiles: int, tile: int) -> int:
+    """Tiles per scan step of the compact selection: amortize the scan
+    without holding more than ~one (step, block_kv)-class score chunk."""
+    return math.gcd(n_tiles, max(1, 512 // tile))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "tile"))
+def stripe_select_xla(
+    q_mean: jnp.ndarray,
+    m_bar: jnp.ndarray,
+    k: jnp.ndarray,
+    cfg: AnchorConfig,
+    tile: int,
+    lengths: jnp.ndarray | None = None,
+    sb0: jnp.ndarray | int = 0,
+) -> tuple[StripeIndex, jnp.ndarray]:
+    """Alg. 2, compact: tile ids + per-head validity, no dense hit mask.
+
+    A chunked scan over the KV tiles: each step scores ONE chunk of
+    ``k`` against the pooled queries, thresholds it against the pooled
+    anchor, and scatters the surviving tiles straight into the
+    ``O(capacity)``-sized tables — the ``(B, Hq, T_s, N)`` mask of the
+    staged pipeline (quadratic in context length) is never materialized
+    (DESIGN.md §9).  Selection semantics are bit-identical to
+    ``compact_stripe_tiles`` over the dense mask: position-ascending,
+    per-QUERY-head ``capacity`` budget (union budget under
+    ``cfg.share_kv_groups``), union tiles per KV head.
+
+    Args:
+      q_mean: (B, Hq, T_m, D) block-pooled queries (f32).
+      m_bar: (B, Hq, T_m) block-pooled anchors (+inf rows never select —
+        all-padding pooled blocks of varlen batches).
+      k: (B, Hkv, Nk, D) keys (``Nk % tile == 0``; may exceed the query
+        span, e.g. a cache view under chunked prefill).
+      tile: KV rows per indexed tile (the DMA granularity).
+      lengths: optional (B,) int32 — keys at positions >= length are
+        never selected.
+      sb0: global id of the first superblock (chunked prefill offsets).
+
+    Returns:
+      (tables, counts): selected-stripe :class:`StripeIndex` tables
+      (NO anchor slots — see ``merge_anchor_slots``) and per-head kept
+      counts (B, Hq, T_s) for sparsity accounting.
+    """
+    b, hq, t_m, d = q_mean.shape
+    hkv, nk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    t_s = (t_m + cfg.step - 1) // cfg.step
+    if nk % tile:
+        raise ValueError(f"tile ({tile}) must divide Nk ({nk})")
+    n_tiles = nk // tile
+    cap_s = nk if cfg.capacity is None else min(cfg.capacity, nk)
+    c_sel = select_capacity(n_tiles, nk, cfg.capacity, g,
+                            cfg.share_kv_groups)
+    scale = 1.0 / (d ** 0.5)
+    f32 = jnp.float32
+
+    pad = t_s * cfg.step - t_m
+    if pad:
+        q_mean = jnp.pad(q_mean, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        m_bar = jnp.pad(m_bar, ((0, 0), (0, 0), (0, pad)),
+                        constant_values=jnp.inf)
+    qm = q_mean.astype(f32).reshape(b, hkv, g, t_s, cfg.step, d)
+    mb = m_bar.astype(f32).reshape(b, hkv, g, t_s, cfg.step)
+    kf = k.astype(f32)
+    w_start = window_start_tokens(
+        jnp.asarray(sb0) + jnp.arange(t_s), cfg
+    )  # (T_s,) first local-window token per superblock
+
+    j_chunk = _select_chunk(n_tiles, tile)
+    w = j_chunk * tile
+    bi = jnp.arange(b)[:, None, None, None]
+    ki = jnp.arange(hkv)[None, :, None, None]
+    si = jnp.arange(t_s)[None, None, :, None]
+    # 5-dim index grid of the (b, hkv, g, t_s, j_chunk) validity scatter.
+    bi5 = jnp.arange(b)[:, None, None, None, None]
+    ki5 = jnp.arange(hkv)[None, :, None, None, None]
+    gi5 = jnp.arange(g)[None, None, :, None, None]
+    si5 = jnp.arange(t_s)[None, None, None, :, None]
+
+    def step(carry, t0):
+        tidx_buf, tcnt, valid_buf, hit_cnt, kept_cnt = carry
+        kt = jax.lax.dynamic_slice_in_dim(kf, t0 * tile, w, axis=2)
+        s = jnp.einsum("bkgspd,bkwd->bkgspw", qm, kt) * scale
+        hit = (mb[..., None] - s <= cfg.theta).any(axis=4)  # (b,hkv,g,t_s,w)
+        cols = t0 * tile + jnp.arange(w)
+        cand = (cols >= cfg.block_kv)[None, :] & (cols[None, :]
+                                                  < w_start[:, None])
+        hit &= cand[None, None, None]
+        if lengths is not None:
+            hit &= cols[None, :] < lengths[:, None, None, None, None]
+        if cfg.share_kv_groups:
+            hit = jnp.broadcast_to(hit.any(axis=2, keepdims=True), hit.shape)
+        hit_i = hit.astype(jnp.int32)
+        rank = hit_cnt[..., None] + jnp.cumsum(hit_i, axis=-1) - hit_i
+        kept = hit & (rank < cap_s)
+        hit_cnt = hit_cnt + hit_i.sum(axis=-1)
+        kept_cnt = kept_cnt + kept.sum(axis=-1)
+
+        keptt = kept.reshape(b, hkv, g, t_s, j_chunk, tile)
+        needed = keptt.any(axis=(2, 5))  # (b, hkv, t_s, j_chunk)
+        needed_i = needed.astype(jnp.int32)
+        slot = tcnt[..., None] + jnp.cumsum(needed_i, axis=-1) - needed_i
+        slot = jnp.where(needed, slot, c_sel)  # overflow/empty -> dropped
+        tids = jnp.broadcast_to(
+            (t0 + jnp.arange(j_chunk)).astype(jnp.int32), slot.shape)
+        tidx_buf = tidx_buf.at[bi, ki, si, slot].set(tids, mode="drop")
+        valid_buf = valid_buf.at[
+            bi5, ki5, gi5, si5, slot[:, :, None]
+        ].set(keptt, mode="drop")
+        tcnt = tcnt + needed_i.sum(axis=-1)
+        return (tidx_buf, tcnt, valid_buf, hit_cnt, kept_cnt), None
+
+    carry = (
+        jnp.zeros((b, hkv, t_s, c_sel), jnp.int32),
+        jnp.zeros((b, hkv, t_s), jnp.int32),
+        jnp.zeros((b, hkv, g, t_s, c_sel, tile), bool),
+        jnp.zeros((b, hkv, g, t_s), jnp.int32),
+        jnp.zeros((b, hkv, g, t_s), jnp.int32),
+    )
+    t0s = jnp.arange(n_tiles // j_chunk, dtype=jnp.int32) * j_chunk
+    (tidx_buf, tcnt, valid_buf, _, kept_cnt), _ = jax.lax.scan(
+        step, carry, t0s)
+    tile_valid = (jnp.arange(c_sel)[None, None, None, :]
+                  < tcnt[..., None]).astype(jnp.int32)
+    tables = StripeIndex(
+        tidx_buf, tile_valid,
+        valid_buf.reshape(b, hkv, g, t_s, c_sel * tile).astype(jnp.int32))
+    return tables, kept_cnt.reshape(b, hq, t_s)
+
+
+dispatch.register("stripe_select", "xla")(stripe_select_xla)
+
+
+def _anchor_region_state(qb, k, v, cfg, t_s, off, lengths):
+    """Zero-state softmax statistics of the anchor region, 6D layout.
+
+    ``qb``: (B, Hkv, T_s, G, sb_q, D) superblock-MAJOR f32 queries whose
+    row 0 sits at global position ``off`` (the T_s axis precedes G so
+    the window einsums' batch dims (b, k, s) are layout-aligned — no
+    per-superblock transposes); ``k``/``v``: the original (B, Hkv, Nk,
+    D/Dv) arrays.  Computes init-block + local-window scores as two
+    contiguous einsums (the XLA analogue of the fused kernel's leading
+    anchor slots — same region, efficient shapes, no per-row statistics
+    ever reshaped out of the 6D layout) and reduces them to the sweep
+    state ``(m, l, acc)`` in one softmax pass.
+    """
+    b, hkv, _, g, sb_q, d = qb.shape
+    nk = k.shape[2]
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    s0, sw, colsc = _anchor_region_scores(qb, kf, cfg, t_s, off, nk, lengths)
+    vw = jnp.take(vf, colsc, axis=2).reshape(b, hkv, t_s, sb_q, -1)
+
+    m = jnp.maximum(jnp.max(s0, axis=-1), jnp.max(sw, axis=-1))
+    p0 = jnp.exp(s0 - m[..., None])
+    p0 = jnp.where(s0 <= _NEG_INF, 0.0, p0)
+    pw = jnp.exp(sw - m[..., None])
+    pw = jnp.where(sw <= _NEG_INF, 0.0, pw)
+    l = jnp.sum(p0, axis=-1) + jnp.sum(pw, axis=-1)
+    acc = (jnp.einsum("bksgqn,bknd->bksgqd", p0, vf[:, :, : cfg.block_kv])
+           + jnp.einsum("bksgqc,bkscd->bksgqd", pw, vw))
+    return m, l, acc
+
+
+def _sweep_body(carry, inp, qb, scale):
+    """One tile-slot update of the shared online-softmax sweep.
+
+    Superblock-major: qb is (B, Hkv, G, T_s, step*block_q, D) f32 (all
+    query rows of a superblock against its one tile — the tile is never
+    duplicated across query blocks); ``inp`` is one slot's
+    ``(kt, vt, ok)`` — the (B, Hkv, T_s, tile, D/Dv) KV tile and the
+    fully-resolved row × column mask (B, Hkv, G, T_s, step_q, tile)
+    (stripe validity ∧ causal ∧ varlen).  Slots with no valid entries
+    are *exact* no-ops (alpha == 1, zero mass), which is what keeps
+    padded-length invariance and the GQA union-table layout bit-stable
+    per head.
+    """
+    m, l, acc = carry
+    kt, vt, ok = inp
+    ktm = kt.astype(jnp.float32)  # (B, Hkv, T_s, tile, D)
+    vtm = vt.astype(jnp.float32)
+    s = jnp.einsum("bkgsqd,bkstd->bkgsqt", qb, ktm) * scale
+    s = jnp.where(ok, s, _NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(ok, p, 0.0)
+    # Fully-masked rows (varlen padding) keep m == -1e30; the guards
+    # keep them at exactly zero mass.
+    p = jnp.where(s <= _NEG_INF, 0.0, p)
+    alpha = jnp.exp(m - m_new)
+    l = l * alpha + jnp.sum(p, axis=-1)
+    acc = acc * alpha[..., None] + jnp.einsum("bkgsqt,bkstd->bkgsqd", p, vtm)
+    return m_new, l, acc
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_c"))
+def sparse_attention_xla(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    tables: StripeIndex,
+    cfg: AnchorConfig,
+    lengths: jnp.ndarray | None = None,
+    q_offset: jnp.ndarray | None = None,
+    block_c: int | None = None,
+) -> jnp.ndarray:
+    """Alg. 3, fused: one zero-state sweep over anchor + selected tiles.
+
+    ``tables`` must carry the guaranteed anchor slots as leading entries
+    (``merge_anchor_slots``); there is no ``(m0, l0, acc0)`` resume
+    state — the sweep computes the anchor region and the stripes in one
+    online softmax.  Only the leading anchor slots pay a causal/varlen
+    trim (they straddle the diagonal); the selected-stripe slots sit
+    strictly below each superblock's window and their validity bits
+    already exclude padding keys, so they run with pure validity
+    masking — exactly the staged sweep's per-slot cost.  Padded query
+    rows (varlen) produce unspecified finite values; the pipeline's
+    final row mask zeroes them (identically for a padded batch and a
+    per-sequence call, so bit-exact varlen invariance is preserved).
+
+    Index-driven: one Hkv-width tile gather per scan slot, nothing
+    Hq-wide, no gathered-KV materialization.  ``q_offset`` is the global
+    position of query row 0 (chunked prefill); ``block_c`` is accepted
+    for signature parity (tile width comes from ``tables``).
+    """
+    del block_c
+    b, hq, n, d = q.shape
+    hkv, nk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    dv = v.shape[-1]
+    tile = tables.tile
+    t_s, c_t = tables.tile_idx.shape[2], tables.tile_idx.shape[3]
+    n_anchor = min(num_anchor_slots(tile, cfg), c_t)
+    step_q = cfg.step * cfg.block_q
+    scale = 1.0 / (d ** 0.5)
+
+    # Superblock-MAJOR layout (T_s before G): every per-tile einsum's
+    # batch dims (b, k, s) are then layout-aligned with the KV tiles, so
+    # the scan body runs without per-step transposes of the query block.
+    qb = _superblock_major(
+        q.astype(jnp.float32), b, hkv, g, t_s, step_q, 0.0
+    ).transpose(0, 1, 3, 2, 4, 5)  # (B, Hkv, T_s, G, step_q, D)
+    kb = k.reshape(b, hkv, nk // tile, tile, d)
+    vb = v.reshape(b, hkv, nk // tile, tile, dv)
+    validb = tables.valid.reshape(
+        b, hkv, g, t_s, c_t * tile).transpose(0, 1, 3, 2, 4)
+
+    # Anchor region from zero state, inline: the leading table slots
+    # exist for the Pallas kernel's DMA indirection; on XLA the same
+    # region is cheaper as two contiguous einsums (true region width,
+    # one softmax pass), so the sweep skips those slots and seeds its
+    # state here instead.  Summation order — anchor first, then stripes
+    # ascending — matches the kernel.
+    off = 0 if q_offset is None else q_offset
+    m, l, acc = _anchor_region_state(qb, k, v, cfg, t_s, off, lengths)
+
+    gather = jax.vmap(jax.vmap(lambda kv_b, ti: kv_b[ti]))  # over (B, Hkv)
+
+    # Scan over slot *indices*; the Hkv-width gather happens inside each
+    # step, so only one tile per (B, Hkv, T_s) is ever live — the XLA
+    # analogue of the kernel's per-step scalar-prefetch DMA.  Stripe
+    # slots are strictly causal by construction (candidates end below
+    # each superblock's window) and their validity bits already exclude
+    # padding keys, so validity IS the mask; a slot with no valid rows
+    # is an exact no-op (alpha == 1, zero mass).
+    def stripe_step(carry, c):
+        m, l, acc = carry
+        tidx = jax.lax.dynamic_index_in_dim(
+            tables.tile_idx, c, axis=-1, keepdims=False)  # (B, Hkv, T_s)
+        kt = gather(kb, tidx)  # (B, Hkv, T_s, tile, D)
+        vt = gather(vb, tidx)
+        vld = jax.lax.dynamic_slice_in_dim(
+            validb, c * tile, tile, axis=-1)  # (B, Hkv, T_s, G, tile)
+        s = jnp.einsum("bksgqd,bkstd->bksgqt", qb, kt) * scale
+        s = jnp.where((vld != 0)[..., None, :], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        # Invalid entries hold s == -1e30, so one guard zeroes them all.
+        p = jnp.where(s <= _NEG_INF, 0.0, p)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bksgqt,bkstd->bksgqd", p, vt)
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        stripe_step, (m, l, acc),
+        jnp.arange(n_anchor, c_t, dtype=jnp.int32))
+    # l >= 1 for causal rows (the anchor slots contain the diagonal); the
+    # guard only protects rows with empty statistics.
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    out = out.transpose(0, 1, 3, 2, 4, 5)  # back to (B, Hkv, G, T_s, ...)
+    return out.reshape(b, hq, t_s * step_q, dv)[:, :, :n]
+
+
+dispatch.register("sparse_attention", "xla")(sparse_attention_xla)
+
+
+# ------------------------------------------------- staged oracle twins ----
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def staged_anchor_stats(
     q: jnp.ndarray,
     k: jnp.ndarray,
     v: jnp.ndarray,
     cfg: AnchorConfig,
     lengths: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Alg. 1 anchor statistics, batched heads — vmapped core implementation.
+    """Staged Alg. 1 (m, l, acc) statistics — vmapped core implementation.
 
-    GQA (Hkv < Hq) vmaps the query-group axis with K/V *broadcast* (no
-    ``jnp.repeat`` expansion).  With ``lengths`` ((B,) int32), padding
-    keys of a right-padded batch are masked out of the statistics and
-    padded rows emit ``(-1e30, 0, 0)``.
+    The pre-fusion pipeline's first stage, kept as the parity oracle and
+    benchmark baseline: emits the full-resolution f32 statistics that
+    the fused path deliberately never materializes.  GQA (Hkv < Hq)
+    vmaps the query-group axis with K/V *broadcast* (no ``jnp.repeat``).
     """
     from repro.core.anchor_attention import anchor_phase
 
@@ -130,24 +585,20 @@ def anchor_phase_xla(
     return state.m, state.l, state.acc
 
 
-dispatch.register("anchor_phase", "xla")(anchor_phase_xla)
-
-
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def stripe_select_xla(
+def staged_stripe_mask(
     q_mean: jnp.ndarray,
     m_bar: jnp.ndarray,
     k: jnp.ndarray,
     cfg: AnchorConfig,
     lengths: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
-    """Alg. 2 stripe hit-mask from pooled inputs — same contract as the kernel.
+    """Staged Alg. 2 — the dense (B, Hq, T_s, N) int32 stripe hit mask.
 
-    q_mean: (B, Hq, T_m, D); m_bar: (B, Hq, T_m); k: (B, Hkv, N, D).
-    Returns (B, Hq, T_s, N) int32.  The identification scores are a
-    group-batched einsum at Hkv width (no K replication).  With
-    ``lengths`` ((B,) int32), keys at positions >= length are never
-    selected.
+    Kept (unregistered) as the oracle the compact ``stripe_select`` op
+    is tested against (``compact_stripe_tiles`` over this mask must be
+    bit-identical to the scan's tables) and as the staged-benchmark
+    baseline.
     """
     batch, hq, t_m, d = q_mean.shape
     hkv, n = k.shape[1], k.shape[2]
@@ -180,55 +631,8 @@ def stripe_select_xla(
     return hit.astype(jnp.int32)
 
 
-dispatch.register("stripe_select", "xla")(stripe_select_xla)
-
-
-def _scan_body(carry, inp, qb, scale):
-    """One tile-slot update of the shared online-softmax resume scan.
-
-    Superblock-major: qb is (B, Hkv, G, T_s, step*block_q, D) f32 (all
-    query rows of a superblock against its one tile — the tile is never
-    duplicated across query blocks); ``inp`` is one slot's
-    ``(kt, vt, vld)`` — the (B, Hkv, T_s, tile, D/Dv) KV tile and the
-    per-query-head validity (B, Hkv, G, T_s, tile).  Slots with no valid
-    rows are *exact* no-ops (alpha == 1, zero mass), which is what keeps
-    padded-length invariance and the GQA union-table layout bit-stable
-    per head.
-    """
-    m, l, acc = carry
-    kt, vt, vld = inp
-    ktm = kt.astype(jnp.float32)  # (B, Hkv, T_s, tile, D)
-    vtm = vt.astype(jnp.float32)
-    ok = (vld != 0)[:, :, :, :, None, :]
-    s = jnp.einsum("bkgsqd,bkstd->bkgsqt", qb, ktm) * scale
-    s = jnp.where(ok, s, _NEG_INF)
-    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-    p = jnp.exp(s - m_new[..., None])
-    p = jnp.where(ok, p, 0.0)
-    # Varlen padding rows resume from m0 == -1e30 with all-invalid
-    # slots; the guards keep them at exactly zero mass.
-    p = jnp.where(s <= _NEG_INF, 0.0, p)
-    alpha = jnp.exp(m - m_new)
-    l = l * alpha + jnp.sum(p, axis=-1)
-    acc = acc * alpha[..., None] + jnp.einsum("bkgsqt,bkstd->bkgsqd", p, vtm)
-    return m_new, l, acc
-
-
-def _superblock_major(x, b, hkv, g, t_s, step_q, fill):
-    """(B, Hq, N, ...) -> (B, Hkv, G, T_s, step_q, ...), padding the
-    ragged last superblock's rows with ``fill`` (sliced off afterwards;
-    the pad rows' statistics start at (-1e30, 0, 0) so they stay NaN-free
-    through the scan)."""
-    n = x.shape[2]
-    pad = t_s * step_q - n
-    if pad:
-        widths = [(0, 0), (0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 3)
-        x = jnp.pad(x, widths, constant_values=fill)
-    return x.reshape(b, hkv, g, t_s, step_q, *x.shape[3:])
-
-
 @functools.partial(jax.jit, static_argnames=("cfg", "block_c"))
-def sparse_attention_xla(
+def staged_sparse_attention(
     q: jnp.ndarray,
     k: jnp.ndarray,
     v: jnp.ndarray,
@@ -239,12 +643,11 @@ def sparse_attention_xla(
     cfg: AnchorConfig,
     block_c: int | None = None,
 ) -> jnp.ndarray:
-    """Alg. 3 resume, index-driven: one Hkv-width tile gather per scan slot.
+    """Staged Alg. 3 — resume the online softmax from ``(m0, l0, acc0)``.
 
-    The gathered working set is a single (B, Hkv, T_s, tile, D) tile per
-    step — the XLA stand-in for the kernel's scalar-prefetch DMA; nothing
-    Hq-wide and no (B, H, T_s, capacity, D) materialization.  ``block_c``
-    is accepted for signature parity (tile width comes from ``tables``).
+    The pre-fusion sparse stage (index-driven, stripe-only tables), kept
+    as the tolerance oracle for the fused sweep and as the consumer the
+    gathered twin is bit-compared against.
     """
     del block_c
     b, hq, n, d = q.shape
@@ -273,22 +676,19 @@ def sparse_attention_xla(
         vld = jax.lax.dynamic_slice_in_dim(
             tables.valid, c * tile, tile, axis=-1
         ).reshape(b, hkv, g, t_s, tile)
-        return kt, vt, vld
+        ok = jnp.broadcast_to(
+            (vld != 0)[:, :, :, :, None, :],
+            (b, hkv, g, t_s, step_q, tile))
+        return kt, vt, ok
 
-    # Scan over slot *indices*; the Hkv-width gather happens inside each
-    # step, so only one tile per (B, Hkv, T_s) is ever live — the XLA
-    # analogue of the kernel's per-step scalar-prefetch DMA.
     def step(carry, c):
-        return _scan_body(carry, slot_inputs(c), qb, scale), None
+        return _sweep_body(carry, slot_inputs(c), qb, scale), None
 
     (m, l, acc), _ = jax.lax.scan(
         step, (m, l, acc), jnp.arange(c_t, dtype=jnp.int32))
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     out = out.reshape(b, hq, t_s * step_q, dv)[:, :, :n]
     return out.astype(q.dtype)
-
-
-dispatch.register("sparse_attention", "xla")(sparse_attention_xla)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -302,7 +702,7 @@ def sparse_attention_gathered(
     acc0: jnp.ndarray,
     cfg: AnchorConfig,
 ) -> jnp.ndarray:
-    """Gather-based twin of :func:`sparse_attention_xla`.
+    """Gather-based twin of :func:`staged_sparse_attention`.
 
     Consumes pre-materialized (B, Hkv, T_s, C, D) tiles (from
     :func:`repro.kernels.indexing.gather_stripe_tiles`) and runs the
@@ -330,7 +730,11 @@ def sparse_attention_gathered(
         tables.valid.reshape(b, hkv, g, t_s, c_t, tile), 4, 0)
 
     def step(carry, inp):
-        return _scan_body(carry, inp, qb, scale), None
+        kt, vt, vld = inp
+        ok = jnp.broadcast_to(
+            (vld != 0)[:, :, :, :, None, :],
+            (b, hkv, g, t_s, step_q, tile))
+        return _sweep_body(carry, (kt, vt, ok), qb, scale), None
 
     (m, l, acc), _ = jax.lax.scan(step, (m, l, acc), (kc, vc, valc))
     out = acc / jnp.maximum(l, 1e-30)[..., None]

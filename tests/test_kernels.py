@@ -81,27 +81,42 @@ def test_anchor_pipeline(b, hq, hkv, n, d, blk, step, theta, dtype):
 
 
 def test_anchor_phase_kernel():
+    """Scores-only kernel: pooled (q_mean, m_bar) vs pooled dense oracle."""
     cfg = AnchorConfig(block_q=32, block_kv=32, step=4, theta=2.0)
     q, k, v = _qkv(2, 1, 2, 2, 256, 32, jnp.float32)
-    m, l, acc = anchor_phase(q, k, v, cfg, backend=PALLAS)
+    q_mean, m_bar = anchor_phase(q, k, cfg, backend=PALLAS)
+    t_m = 256 // 32
     for h in range(2):
-        mr, lr, ar = anchor_phase_ref(q[0, h], k[0, h], v[0, h], cfg)
-        np.testing.assert_allclose(np.asarray(m[0, h]), np.asarray(mr), atol=1e-5)
-        np.testing.assert_allclose(np.asarray(l[0, h]), np.asarray(lr), rtol=1e-5, atol=1e-5)
-        np.testing.assert_allclose(np.asarray(acc[0, h]), np.asarray(ar), rtol=1e-4, atol=1e-4)
+        mr, _, _ = anchor_phase_ref(q[0, h], k[0, h], v[0, h], cfg)
+        np.testing.assert_allclose(
+            np.asarray(m_bar[0, h]),
+            np.asarray(jnp.mean(mr.reshape(t_m, 32), axis=1)), atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(q_mean[0, h]),
+            np.asarray(jnp.mean(q[0, h].reshape(t_m, 32, 32), axis=1)),
+            atol=1e-5)
 
 
 def test_stripe_select_kernel():
+    """Compact kernel ≡ compact_stripe_tiles over the dense oracle mask."""
+    from repro.kernels import compact_stripe_tiles
+
     cfg = AnchorConfig(block_q=32, block_kv=32, step=4, theta=2.0)
     q, k, v = _qkv(3, 1, 1, 1, 256, 32, jnp.float32)
-    m, _, _ = anchor_phase(q, k, v, cfg, backend=PALLAS)
+    mr, _, _ = anchor_phase_ref(q[0, 0], k[0, 0], v[0, 0], cfg)
     t_m = 256 // 32
     q_mean = jnp.mean(q.reshape(1, 1, t_m, 32, 32), axis=3)
-    m_bar = jnp.mean(m.reshape(1, 1, t_m, 32), axis=3)
-    hit = stripe_select(q_mean, m_bar, k, cfg, backend=PALLAS)
-    ref = stripe_mask_ref(q[0, 0], k[0, 0], m[0, 0], cfg)
-    np.testing.assert_array_equal(
-        np.asarray(hit[0, 0]).astype(bool), np.asarray(ref))
+    m_bar = jnp.mean(mr.reshape(t_m, 32), axis=1)[None, None]
+    tables, counts = stripe_select(q_mean, m_bar, k, cfg, 32, backend=PALLAS)
+    ref = stripe_mask_ref(q[0, 0], k[0, 0], mr, cfg)
+    want, want_counts = compact_stripe_tiles(
+        ref[None, None].astype(jnp.int32), 1, 32)
+    np.testing.assert_array_equal(np.asarray(tables.tile_idx),
+                                  np.asarray(want.tile_idx))
+    np.testing.assert_array_equal(np.asarray(tables.valid),
+                                  np.asarray(want.valid))
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  np.asarray(want_counts))
 
 
 def test_pack_stripe_indices_exact_when_capacity_suffices():

@@ -166,12 +166,17 @@ class TestCanonicalEntryPoint:
         out = repro.attention(q, k, v, spec, lengths=lengths)
         assert np.allclose(np.asarray(out[0, :, 39:]), 0.0)
         assert np.isfinite(np.asarray(out)).all()
-        # Padding keys are never stripe-selected.
-        hit = kernel_ops.stripe_select(
+        # Padding keys are never stripe-selected: every valid slot of the
+        # compact tables must name a position < length.
+        tables, _ = kernel_ops.stripe_select(
             jnp.mean(q.reshape(2, 1, 4, 16, 16), axis=3),
-            jnp.zeros((2, 1, 4)), k, ANCHOR16, lengths=lengths,
+            jnp.zeros((2, 1, 4)), k, ANCHOR16, 16, lengths=lengths,
             backend="xla")
-        assert int(np.asarray(hit[0, :, :, 39:]).sum()) == 0
+        cols = (np.asarray(tables.tile_idx)[..., None] * tables.tile
+                + np.arange(tables.tile))  # (B, Hkv, T_s, C, tile)
+        cols = cols.reshape(*cols.shape[:3], -1)[:, :, None]  # +G axis
+        selected = np.asarray(tables.valid) != 0  # (B, Hkv, G, T_s, C*tile)
+        assert not (selected[0] & (cols[0] >= 39)).any()
 
 
 class TestServingEngineVarlen:
